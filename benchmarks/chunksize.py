@@ -1,0 +1,44 @@
+"""Paper Table 6: deflate/inflate throughput vs chunk size (2^6..2^16).
+
+Reproduces the paper's finding that a moderate chunk count (~2e4
+concurrent chunks on V100; the analogous sweet spot here) balances
+parallelism against per-chunk overhead."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compressor as C, dualquant as dq, huffman as hf
+from repro.data import scidata
+from .common import emit, timeit
+
+
+def main() -> None:
+    f = jnp.asarray(scidata.hacc_like(1 << 21))
+    cfg = C.CompressorConfig(eb=1e-4, eb_mode="valrel")
+    eb = C.resolve_eb(cfg, f)
+    delta = dq.blocked_delta(f, eb, (256,))
+    codes, _ = dq.postquant_codes(delta, cfg.nbins)
+    cb = hf.canonical_codebook(hf.codeword_lengths(hf.histogram(codes, cfg.nbins)))
+    cw, bw = hf.encode(codes, cb)
+    n = cw.shape[0]
+    nbytes = f.size * 4
+    for lg in range(6, 17):
+        chunk = 1 << lg
+        defl = jax.jit(lambda c, b: hf.deflate(c, b, chunk))
+        t_d = timeit(defl, cw, bw)
+        words, bits = defl(cw, bw)
+        nc = words.shape[0]
+        n_valid = jnp.asarray(np.minimum(
+            chunk, np.maximum(n - np.arange(nc) * chunk, 0)).astype(np.int32))
+        infl = jax.jit(lambda w, v: hf.inflate_lut(
+            w, v, cb, lut_bits=min(hf.LUT_BITS, max(1, int(cb.max_len)))))
+        t_i = timeit(infl, words, n_valid)
+        emit(f"deflate_c{chunk}", t_d,
+             f"GBps={nbytes / t_d / 1e9:.3f};threads={nc:.0f}")
+        emit(f"inflate_c{chunk}", t_i, f"GBps={nbytes / t_i / 1e9:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Paper Table 3: codebook construction time vs #quantization bins.
+
+Measures the device two-queue tree build + canonization for 128..8192
+bins on a Hurricane-like field's quant codes (time complexity check:
+O(k log k)-ish growth, §3.2.2)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compressor as C, dualquant as dq, huffman as hf
+from repro.data import scidata
+from .common import emit, timeit
+
+
+def main() -> None:
+    f = jnp.asarray(scidata.hurricane_like((25, 125, 125)))
+    eb = 1e-4 * float(jnp.max(f) - jnp.min(f))
+    delta = dq.blocked_delta(f, eb, (8, 8, 8))
+    for nbins in (128, 256, 512, 1024, 2048, 4096, 8192):
+        codes, _ = dq.postquant_codes(delta, nbins)
+        hist = hf.histogram(codes, nbins)
+
+        def build(h):
+            lengths = hf.codeword_lengths(h)
+            return hf.canonical_codebook(lengths).codes
+
+        t = timeit(jax.jit(build), hist)
+        emit(f"codebook_bins{nbins}", t, f"bins={nbins}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Shared benchmark utilities: timing + CSV emission.
+
+CPU-container caveat (DESIGN.md §9): wall-clock numbers here are CPU
+measurements used as *relative* signals between variants; the TPU
+performance story is the dry-run roofline (benchmarks/roofline.py).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 3):
+    """Median wall time of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def emit(name: str, seconds: float, derived: str = ""):
+    print(f"{name},{seconds * 1e6:.1f},{derived}")

@@ -1,0 +1,46 @@
+"""Paper Table 4: adaptive 32- vs 64-bit Huffman codeword representation.
+
+Times the encode (codebook gather + unpack) with the packed u32 unit vs
+the u64-emulated unit; derived column reports achieved GB/s over the
+source bytes and the selected representation."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compressor as C, dualquant as dq, huffman as hf
+from repro.data import scidata
+from .common import emit, timeit
+
+
+@partial(jax.jit, static_argnames=("unit",))
+def encode_packed(codes, packed, unit):
+    flat = codes.reshape(-1)
+    if unit == 32:
+        e = packed[flat]
+        return e & jnp.uint32((1 << 26) - 1), e >> 26
+    e = packed[flat]                       # [N,2] (hi=len, lo=code)
+    return e[:, 1], e[:, 0]
+
+
+def main() -> None:
+    f = jnp.asarray(scidata.nyx_like((96, 96, 96)))
+    cfg = C.CompressorConfig(eb=1e-4, eb_mode="valrel")
+    eb = C.resolve_eb(cfg, f)
+    delta = dq.blocked_delta(f, eb, (8, 8, 8))
+    codes, _ = dq.postquant_codes(delta, cfg.nbins)
+    cb = hf.canonical_codebook(hf.codeword_lengths(hf.histogram(codes, cfg.nbins)))
+    nbytes = f.size * 4
+    for unit in (32, 64):
+        packed = hf.packed_codebook(cb, unit)
+        t = timeit(lambda c, p: encode_packed(c, p, unit), codes, packed)
+        emit(f"encode_u{unit}", t, f"GBps={nbytes / t / 1e9:.2f}")
+    emit("selected_repr", 0.0,
+         f"u{hf.select_repr(int(cb.max_len))} maxlen={int(cb.max_len)}")
+
+
+if __name__ == "__main__":
+    main()

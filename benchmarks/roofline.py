@@ -1,0 +1,96 @@
+"""§Roofline builder: joins the dry-run JSONs (compile proof, per-device
+memory, collective inventory) with the analytic cost model (loop-aware
+FLOPs/bytes/collective terms — see repro/perf/costmodel.py for why the
+HLO cost_analysis alone cannot provide these) into the per-cell table.
+
+Writes results/roofline.csv and prints a readable summary."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+import numpy as np
+
+from repro.launch.dryrun import ARCH_TRAIN
+from repro.perf import costmodel as CM
+
+
+def build(dryrun_dir: str = "results/dryrun",
+          out_csv: str = "results/roofline.csv"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        rec = json.load(open(path))
+        if rec.get("status") == "skipped":
+            rows.append({"cell": rec["cell"], "status": "skipped",
+                         "reason": rec.get("reason", "")})
+            continue
+        if rec.get("status") != "ok":
+            rows.append({"cell": rec["cell"], "status": "error"})
+            continue
+        arch, shape, mesh = rec["arch"], rec["shape"], rec["mesh"]
+        knobs = ARCH_TRAIN.get(arch, {})
+        mb = knobs.get("microbatches", 1)
+        if mesh == "multipod":
+            mb = min(mb, 8)
+        wc = "int8" if "__wc-int8" in rec["cell"] else "none"
+        kvc = "__kvc" in rec["cell"]
+        a2a = "int8" if "__a2a-int8" in rec["cell"] else "none"
+        if "__mb" in rec["cell"]:
+            mb = int(rec["cell"].split("__mb")[1].split("__")[0])
+        cost = CM.cell_cost(
+            arch, shape, mesh == "multipod",
+            microbatches=mb,
+            grad_compress=rec.get("grad_compress", "none"),
+            accum_bytes=2 if knobs.get("accum_bf16") else 4,
+            weight_compress=wc, kv_compress=kvc, a2a_compress=a2a)
+        terms = cost.terms()
+        mf = rec.get("model_flops_global", 0.0)
+        chips = rec["n_chips"]
+        useful = mf / (cost.flops * chips) if cost.flops else float("nan")
+        bound = terms["bound_s"]
+        ideal = terms["compute_s"]
+        rows.append({
+            "cell": rec["cell"], "status": "ok", "arch": arch,
+            "shape": shape, "mesh": mesh,
+            "gc": rec.get("grad_compress", "none"),
+            "compute_s": terms["compute_s"], "memory_s": terms["memory_s"],
+            "collective_s": terms["collective_s"],
+            "dominant": terms["dominant"],
+            "roofline_frac": ideal / bound if bound else float("nan"),
+            "useful_flops_ratio": useful,
+            "mem_GiB_per_dev": rec["memory"]["per_device_total_GiB"],
+            "hlo_coll_bytes_dev": rec["collective_bytes_per_device"],
+            "hlo_coll_counts": json.dumps(rec.get("collective_counts", {})),
+        })
+    os.makedirs(os.path.dirname(out_csv), exist_ok=True)
+    if rows:
+        keys = ["cell", "status", "arch", "shape", "mesh", "gc", "compute_s",
+                "memory_s", "collective_s", "dominant", "roofline_frac",
+                "useful_flops_ratio", "mem_GiB_per_dev",
+                "hlo_coll_bytes_dev", "hlo_coll_counts", "reason"]
+        with open(out_csv, "w") as f:
+            f.write(",".join(keys) + "\n")
+            for r in rows:
+                f.write(",".join(
+                    f"\"{r.get(k, '')}\"" if k == "hlo_coll_counts"
+                    else (f"{r.get(k, ''):.6g}" if isinstance(r.get(k), float)
+                          else str(r.get(k, ""))) for k in keys) + "\n")
+    return rows
+
+
+def main() -> None:
+    rows = build()
+    ok = [r for r in rows if r.get("status") == "ok"]
+    for r in ok:
+        print(f"{r['cell']},{r['dominant']},"
+              f"frac={r['roofline_frac']:.3f};mem={r['mem_GiB_per_dev']:.2f}GiB;"
+              f"c/m/x={r['compute_s'] * 1e3:.1f}/{r['memory_s'] * 1e3:.1f}/"
+              f"{r['collective_s'] * 1e3:.1f}ms")
+    nskip = sum(1 for r in rows if r.get("status") == "skipped")
+    nerr = sum(1 for r in rows if r.get("status") == "error")
+    print(f"roofline_summary,0.0,ok={len(ok)};skipped={nskip};errors={nerr}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Benchmark harness entry point: one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV lines.
+
+  Table 3  -> codebook            Table 4  -> huffman_repr
+  Table 5/8-> quality             Table 6  -> chunksize
+  Table 7  -> throughput          Figs 6-8 -> rate_distortion
+  beyond   -> grad_compression    §Roofline-> roofline (from dry-run JSONs)
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+from . import (chunksize, codebook, grad_compression, huffman_repr, quality,
+               rate_distortion, roofline, throughput)
+
+MODULES = [
+    ("codebook", codebook),
+    ("huffman_repr", huffman_repr),
+    ("quality", quality),
+    ("chunksize", chunksize),
+    ("throughput", throughput),
+    ("rate_distortion", rate_distortion),
+    ("grad_compression", grad_compression),
+    ("roofline", roofline),
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failed = []
+    for name, mod in MODULES:
+        try:
+            mod.main()
+        except Exception as e:                     # noqa: BLE001
+            failed.append(name)
+            print(f"{name}_FAILED,0.0,{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        raise SystemExit(f"benchmarks failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

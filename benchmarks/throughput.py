@@ -1,0 +1,71 @@
+"""Paper Table 7: per-stage throughput breakdown of the full pipeline
+(predict-quant, histogram, codebook, encode, deflate; decoding: inflate,
+reversed predict-quant).  CPU numbers — relative structure mirrors the
+paper's breakdown; absolute TPU projections live in the roofline."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compressor as C, dualquant as dq, huffman as hf
+from repro.data import scidata
+from .common import emit, timeit
+
+
+def main() -> None:
+    fields = {
+        "hacc": scidata.hacc_like(1 << 21),
+        "cesm": scidata.cesm_like((450, 900)),
+        "hurricane": scidata.hurricane_like((25, 250, 250)),
+        "nyx": scidata.nyx_like((96, 96, 96)),
+        "qmcpack": scidata.qmcpack_like((12, 36, 36, 36)),
+    }
+    for name, arr in fields.items():
+        f = jnp.asarray(arr)
+        nbytes = f.size * 4
+        cfg = C.CompressorConfig(eb=1e-4, eb_mode="valrel")
+        eb = C.resolve_eb(cfg, f)
+        block = cfg.block_for(f.ndim)
+
+        dquant = jax.jit(lambda x: dq.blocked_delta(x, eb, block))
+        t = timeit(dquant, f)
+        emit(f"T7_{name}_dualquant", t, f"GBps={nbytes / t / 1e9:.3f}")
+        delta = dquant(f)
+        codes, _ = dq.postquant_codes(delta, cfg.nbins)
+
+        t = timeit(jax.jit(lambda c: hf.histogram(c, cfg.nbins)), codes)
+        emit(f"T7_{name}_histogram", t, f"GBps={nbytes / t / 1e9:.3f}")
+        hist = hf.histogram(codes, cfg.nbins)
+
+        build = jax.jit(lambda h: hf.canonical_codebook(
+            hf.codeword_lengths(h)).codes)
+        t = timeit(build, hist)
+        emit(f"T7_{name}_codebook", t, f"ms={t * 1e3:.2f}")
+        cb = hf.canonical_codebook(hf.codeword_lengths(hist))
+
+        enc = jax.jit(lambda c: hf.encode(c, cb))
+        t = timeit(enc, codes)
+        emit(f"T7_{name}_encode", t, f"GBps={nbytes / t / 1e9:.3f}")
+        cw, bw = enc(codes)
+
+        defl = jax.jit(lambda c, b: hf.deflate(c, b, cfg.chunk_size))
+        t = timeit(defl, cw, bw)
+        emit(f"T7_{name}_deflate", t, f"GBps={nbytes / t / 1e9:.3f}")
+
+        comp = jax.jit(lambda x: C._compress_impl(x, cfg, eb).words)
+        t_comp = timeit(comp, f)
+        emit(f"T7_{name}_compress_total", t_comp,
+             f"GBps={nbytes / t_comp / 1e9:.3f}")
+
+        blob, _ = C.compress(f, cfg)
+        ml = max(1, int(blob.max_len))
+        dec = jax.jit(lambda b: C._decompress_impl(b, cfg, eb,
+                                                   tuple(f.shape), ml))
+        t_dec = timeit(dec, blob)
+        emit(f"T7_{name}_decompress_total", t_dec,
+             f"GBps={nbytes / t_dec / 1e9:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Quickstart: error-bounded compression of a scientific field (the
+paper's core use case) in ~20 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+
+from repro.core import compressor as C, metrics as M
+from repro.data import scidata
+
+# a Hurricane-Isabel-like 3D field (synthetic SDRBench stand-in)
+field = jnp.asarray(scidata.hurricane_like((25, 125, 125)))
+
+# compress at the paper's headline setting: value-range-relative 1e-4
+cfg = C.CompressorConfig(eb=1e-4, eb_mode="valrel")
+recon, blob, eb, ratio = C.roundtrip(field, cfg)
+
+print(f"field             : {field.shape} float32 "
+      f"({field.size * 4 / 1e6:.1f} MB)")
+print(f"error bound (abs) : {eb:.3e}")
+print(f"compression ratio : {ratio:.2f}x "
+      f"({C.compressed_bytes(blob, cfg.nbins) / 1e6:.2f} MB)")
+print(f"PSNR              : {float(M.psnr(field, recon)):.1f} dB")
+print(f"max |d - d'|      : {float(M.max_abs_err(field, recon)):.3e}")
+print(f"bound held        : {M.verify_error_bound(field, recon, eb)}")
+print(f"outliers          : {int(blob.n_outliers)} "
+      f"(capacity {blob.out_idx.shape[0]})")

@@ -1,0 +1,5 @@
+"""cuSZ core: dual-quantization + customized canonical Huffman coding,
+plus the framework integration surfaces (gradient / KV-cache / checkpoint
+compression) and the cuZFP-like comparison baseline."""
+from . import dualquant, huffman, compressor, metrics, zfp_like, gradient, kvcache  # noqa: F401
+from .compressor import CompressorConfig, CompressedBlob, compress, decompress, roundtrip  # noqa: F401

@@ -1,0 +1,213 @@
+"""End-to-end cuSZ pipeline: dual-quant -> outliers -> Huffman -> blob.
+
+`compress` / `decompress` are jittable for fixed (shape, config); the blob
+is a pytree of device arrays so it can live on-device (e.g. checkpoint
+write path) or be pulled to host for storage.
+
+Compressed-size accounting matches the paper's: Huffman bitstream (word
+aligned per chunk) + sparse outliers + codebook (bitlengths suffice to
+rebuild the canonical book) + O(1) header.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import dualquant as dq
+from . import huffman as hf
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressorConfig:
+    eb: float = 1e-4                 # absolute error bound (see eb_mode)
+    eb_mode: str = "abs"             # "abs" | "valrel" (relative to range)
+    nbins: int = 1024                # quantization bins (paper default)
+    chunk_size: int = 4096           # Huffman deflate chunk (symbols)
+    block: Optional[Tuple[int, ...]] = None   # Lorenzo block; None = paper default
+    outlier_frac: float = 0.10       # sparse outlier capacity fraction
+    use_tpu_blocks: bool = False     # lane-aligned blocks (beyond-paper)
+
+    def block_for(self, ndim: int) -> Tuple[int, ...]:
+        if self.block is not None:
+            return self.block
+        table = dq.TPU_BLOCKS if self.use_tpu_blocks else dq.DEFAULT_BLOCKS
+        if ndim <= 3:
+            return table[ndim]
+        # >3D (e.g. QMCPACK 4D): block the trailing 3 dims (paper treats
+        # the leading dim as a batch of 3D fields)
+        return (1,) * (ndim - 3) + table[3]
+
+
+class CompressedBlob(NamedTuple):
+    words: jax.Array         # [nc, chunk] uint32 deflated bitstream
+    bits_used: jax.Array     # [nc] int32
+    n_valid: jax.Array       # [nc] int32 symbols per chunk
+    lengths: jax.Array       # [k] int32 codeword bitlengths (rebuilds book)
+    out_idx: jax.Array       # [cap] int32 outlier flat indices (-1 fill)
+    out_val: jax.Array       # [cap] int32 outlier deltas
+    n_outliers: jax.Array    # scalar int32
+    max_len: jax.Array       # scalar int32 practical max codeword length
+
+
+def resolve_eb(cfg: CompressorConfig, data) -> float:
+    if cfg.eb_mode == "abs":
+        eb = float(cfg.eb)
+    else:
+        rng = float(np.asarray(jax.device_get(jnp.max(data) - jnp.min(data))))
+        eb = float(cfg.eb) * (rng if rng > 0 else 1.0)
+    # fp32/int32 domain guard (paper stores d° in FP for the same reason):
+    # d° = d/(2eb) must stay within exact-integer float32/int32 range,
+    # otherwise the bound is unrepresentable in fp32 to begin with.
+    amax = float(np.asarray(jax.device_get(jnp.max(jnp.abs(data)))))
+    if amax > 0 and amax / (2 * eb) >= 2 ** 23:
+        raise ValueError(
+            f"error bound {eb:g} is below float32 resolution for data with "
+            f"max |d|={amax:g} (d° would exceed 2^23); choose eb >= "
+            f"{amax / 2 ** 24:g}")
+    return eb
+
+
+def _shape_meta(shape, cfg):
+    ndim = len(shape)
+    block = cfg.block_for(ndim)
+    pshape = dq.padded_shape(shape, block)
+    n = int(np.prod(pshape))
+    cap = max(16, int(n * cfg.outlier_frac))
+    return ndim, block, pshape, n, cap
+
+
+@partial(jax.jit, static_argnames=("cfg", "eb"))
+def _compress_impl(data: jax.Array, cfg: CompressorConfig, eb: float
+                   ) -> CompressedBlob:
+    ndim, block, pshape, n, cap = _shape_meta(data.shape, cfg)
+    delta = dq.blocked_delta(data, eb, block)            # [nb.., b..] int32
+    codes, in_cap = dq.postquant_codes(delta, cfg.nbins)
+    dflat = delta.reshape(-1)
+    oidx, oval, n_out = dq.extract_outliers(dflat, in_cap.reshape(-1), cap)
+    hist = hf.histogram(codes, cfg.nbins)
+    lengths = hf.codeword_lengths(hist)
+    cb = hf.canonical_codebook(lengths)
+    cw, bw = hf.encode(codes, cb)
+    words, bits = hf.deflate(cw, bw, cfg.chunk_size)
+    nc = words.shape[0]
+    n_sym = codes.size
+    n_valid = jnp.minimum(
+        jnp.full((nc,), cfg.chunk_size, jnp.int32),
+        jnp.maximum(n_sym - jnp.arange(nc, dtype=jnp.int32) * cfg.chunk_size, 0))
+    return CompressedBlob(words, bits, n_valid, lengths, oidx, oval,
+                          n_out, cb.max_len)
+
+
+def compress(data: jax.Array, cfg: CompressorConfig) -> Tuple[CompressedBlob, float]:
+    """Returns (blob, resolved_abs_eb)."""
+    eb = resolve_eb(cfg, data)
+    return _compress_impl(data, cfg, eb), eb
+
+
+@partial(jax.jit, static_argnames=("cfg", "eb", "shape", "max_len_static"))
+def _decompress_impl(blob: CompressedBlob, cfg: CompressorConfig, eb: float,
+                     shape: Tuple[int, ...], max_len_static: int) -> jax.Array:
+    ndim, block, pshape, n, cap = _shape_meta(shape, cfg)
+    cb = hf.canonical_codebook(blob.lengths)
+    codes = hf.inflate(blob.words, blob.bits_used, blob.n_valid, cb,
+                       max_len_static).reshape(-1)[:n]
+    delta = dq.codes_to_delta(codes, cfg.nbins)
+    delta = dq.scatter_outliers(delta, blob.out_idx, blob.out_val)
+    nb = tuple(p // b for p, b in zip(pshape, block))
+    delta = delta.reshape(nb + tuple(block))
+    return dq.blocked_reconstruct(delta, eb, block, shape)
+
+
+def decompress(blob: CompressedBlob, cfg: CompressorConfig, eb: float,
+               shape: Tuple[int, ...]) -> jax.Array:
+    max_len = int(jax.device_get(blob.max_len))
+    return _decompress_impl(blob, cfg, eb, shape, max(1, max_len))
+
+
+# ---------------------------------------------------------------------------
+# Size accounting / ratio
+# ---------------------------------------------------------------------------
+
+HEADER_BYTES = 64
+
+
+def compressed_bytes(blob: CompressedBlob, nbins: int) -> int:
+    bits = np.asarray(jax.device_get(blob.bits_used), dtype=np.int64)
+    stream = int(np.sum((bits + 31) // 32) * 4)
+    n_out = int(jax.device_get(blob.n_outliers))
+    outliers = n_out * 8                       # (idx, delta) int32 pairs
+    book = nbins                               # 1 B bitlength per symbol
+    return stream + outliers + book + HEADER_BYTES
+
+
+def compression_ratio(data: jax.Array, blob: CompressedBlob, nbins: int) -> float:
+    raw = data.size * data.dtype.itemsize
+    return raw / compressed_bytes(blob, nbins)
+
+
+def roundtrip(data: jax.Array, cfg: CompressorConfig):
+    """compress -> decompress; returns (recon, blob, eb, ratio)."""
+    blob, eb = compress(data, cfg)
+    recon = decompress(blob, cfg, eb, tuple(data.shape))
+    return recon, blob, eb, compression_ratio(data, blob, cfg.nbins)
+
+
+# ---------------------------------------------------------------------------
+# Host-side packing for storage: keep only the used words per chunk (the
+# device blob keeps a dense [nc, chunk] buffer for fixed shapes; storing
+# that verbatim would waste the saved ratio).
+# ---------------------------------------------------------------------------
+
+def pack_blob(blob: CompressedBlob) -> dict:
+    b = jax.device_get(blob)
+    words = np.asarray(b.words)
+    bits = np.asarray(b.bits_used, dtype=np.int64)
+    nwords = (bits + 31) // 32
+    packed = np.concatenate([words[c, :nwords[c]]
+                             for c in range(words.shape[0])]) \
+        if words.shape[0] else np.zeros((0,), np.uint32)
+    n_out = int(b.n_outliers)
+    return {
+        "words_packed": packed.astype(np.uint32),
+        "bits_used": np.asarray(b.bits_used, np.int32),
+        "n_valid": np.asarray(b.n_valid, np.int32),
+        "lengths": np.asarray(b.lengths, np.uint8),
+        "out_idx": np.asarray(b.out_idx[:n_out], np.int32),
+        "out_val": np.asarray(b.out_val[:n_out], np.int32),
+        "max_len": np.asarray(b.max_len, np.int32),
+        "chunk_words": np.int32(words.shape[1]),
+        "out_capacity": np.int32(b.out_idx.shape[0]),
+    }
+
+
+def packed_nbytes(d: dict) -> int:
+    return sum(np.asarray(v).nbytes for v in d.values())
+
+
+def unpack_blob(d: dict) -> CompressedBlob:
+    bits = np.asarray(d["bits_used"], np.int64)
+    nc = bits.shape[0]
+    cw = int(d["chunk_words"])
+    words = np.zeros((nc, cw), np.uint32)
+    pos = 0
+    for c in range(nc):
+        n = int((bits[c] + 31) // 32)
+        words[c, :n] = d["words_packed"][pos:pos + n]
+        pos += n
+    cap = int(d["out_capacity"])
+    oi = np.full((cap,), 2 ** 31 - 1, np.int32)
+    ov = np.zeros((cap,), np.int32)
+    n_out = len(d["out_idx"])
+    oi[:n_out] = d["out_idx"]
+    ov[:n_out] = d["out_val"]
+    return CompressedBlob(
+        jnp.asarray(words), jnp.asarray(d["bits_used"]),
+        jnp.asarray(d["n_valid"]),
+        jnp.asarray(np.asarray(d["lengths"], np.int32)),
+        jnp.asarray(oi), jnp.asarray(ov),
+        jnp.asarray(np.int32(n_out)), jnp.asarray(d["max_len"]))

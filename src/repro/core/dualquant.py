@@ -1,0 +1,196 @@
+"""DUAL-QUANTIZATION (cuSZ §3.1) in JAX, adapted for TPU.
+
+The paper's scheme:
+  PREQUANT   d° = round(d / (2·eb))           (the ONLY lossy step)
+  PREDICT    p° = ℓ(d°_neighbors)             (Lorenzo predictor)
+  POSTQUANT  δ° = d° − p°                     (exact integer arithmetic)
+
+On pre-quantized integers the 1st-order Lorenzo predictor is exactly the
+d-dimensional first-difference operator, so
+
+  δ = Π_axes (1 − S_axis) d°     (S = shift-by-one with zero fill)
+
+and its inverse is integration: an inclusive prefix sum (cumsum) along each
+axis.  This is the central TPU adaptation (DESIGN.md §2): the paper's
+decompression is sequential per chunk (RAW chain); here the reverse
+dual-quant becomes a stack of `jnp.cumsum` calls — fully parallel and exact
+in int32.
+
+Blocking follows the paper (§3.1.1): data is split into independent blocks
+with an implicit zero padding layer, so the outer-layer points fall back to
+lower-order Lorenzo, every point is handled uniformly, and blocks are
+embarrassingly parallel in both directions.  Default block shapes are the
+paper's (32 / 16×16 / 8×8×8); larger TPU-friendly blocks are available and
+benchmarked (bigger VMEM tiles, fewer boundary resets → better ratio).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Paper defaults (§3.1.1).
+DEFAULT_BLOCKS = {1: (256,), 2: (16, 16), 3: (8, 8, 8)}
+# TPU-friendly blocks (lane-aligned; see EXPERIMENTS.md §Perf).
+TPU_BLOCKS = {1: (4096,), 2: (64, 128), 3: (8, 16, 128)}
+
+
+def prequant(data: jax.Array, eb: float) -> jax.Array:
+    """PREQUANT: d° = round(d/(2·eb)), stored as int32 (exact domain).
+
+    |d − d°·2eb| ≤ eb by construction; this is the only lossy step of the
+    whole pipeline.  Valid while |d|/(2·eb) < 2**31 (guarded in compressor).
+    """
+    return jnp.rint(data.astype(jnp.float32) / (2.0 * eb)).astype(jnp.int32)
+
+
+def dequant(dq: jax.Array, eb: float, dtype=jnp.float32) -> jax.Array:
+    """Inverse of PREQUANT: d• = d°·(2·eb)."""
+    return (dq.astype(jnp.float32) * (2.0 * eb)).astype(dtype)
+
+
+def lorenzo_delta(dq: jax.Array, axes: Sequence[int]) -> jax.Array:
+    """POSTQUANT deltas: apply (1 − S) along each axis (zero-padded shift).
+
+    Equivalent to δ = d° − ℓ(d°_sr) with the paper's zero padding layer.
+    Exact in int32.
+    """
+    delta = dq
+    for ax in axes:
+        delta = delta - _shift1(delta, ax)
+    return delta
+
+
+def lorenzo_reconstruct(delta: jax.Array, axes: Sequence[int]) -> jax.Array:
+    """Inverse of `lorenzo_delta`: inclusive cumsum along each axis.
+
+    This replaces the paper's sequential cascading reconstruction (§3.3)
+    with an associative-scan-friendly form — the TPU-native inverse.
+    """
+    dq = delta
+    for ax in axes:
+        dq = jnp.cumsum(dq, axis=ax, dtype=delta.dtype)
+    return dq
+
+
+def _shift1(x: jax.Array, axis: int) -> jax.Array:
+    """Shift by +1 along `axis`, filling with 0 (the padding layer)."""
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (1, 0)
+    sl = [slice(None)] * x.ndim
+    sl[axis] = slice(0, x.shape[axis])
+    return jnp.pad(x, pad)[tuple(sl)]
+
+
+# ---------------------------------------------------------------------------
+# Blocking (paper §3.1.1): reshape into independent blocks so that both
+# compression and decompression parallelize coarsely, with the zero padding
+# layer at every block boundary.
+# ---------------------------------------------------------------------------
+
+def padded_shape(shape: Sequence[int], block: Sequence[int]) -> Tuple[int, ...]:
+    return tuple(-(-s // b) * b for s, b in zip(shape, block))
+
+
+def pad_to_blocks(x: jax.Array, block: Sequence[int]) -> jax.Array:
+    """Edge-replicate pad to a multiple of the block shape (cropped on
+    decompress; replicate keeps the pad region cheap to encode)."""
+    tgt = padded_shape(x.shape, block)
+    pad = [(0, t - s) for s, t in zip(x.shape, tgt)]
+    if all(p == (0, 0) for p in pad):
+        return x
+    return jnp.pad(x, pad, mode="edge")
+
+
+def block_split(x: jax.Array, block: Sequence[int]) -> jax.Array:
+    """[D1,..,Dn] -> [nb1,..,nbn, b1,..,bn] (block axes last)."""
+    n = x.ndim
+    assert len(block) == n
+    shp = []
+    for s, b in zip(x.shape, block):
+        assert s % b == 0, (x.shape, block)
+        shp += [s // b, b]
+    x = x.reshape(shp)
+    perm = list(range(0, 2 * n, 2)) + list(range(1, 2 * n, 2))
+    return x.transpose(perm)
+
+
+def block_merge(x: jax.Array, block: Sequence[int]) -> jax.Array:
+    """Inverse of block_split."""
+    n = x.ndim // 2
+    perm = []
+    for i in range(n):
+        perm += [i, n + i]
+    x = x.transpose(perm)
+    shp = [x.shape[2 * i] * x.shape[2 * i + 1] for i in range(n)]
+    return x.reshape(shp)
+
+
+def blocked_delta(x: jax.Array, eb: float, block: Sequence[int]) -> jax.Array:
+    """pad → PREQUANT → block → Lorenzo delta on in-block axes.
+
+    Returns int32 deltas shaped [nb..., b...].
+    """
+    n = x.ndim
+    xb = block_split(pad_to_blocks(x, block), block)
+    dq = prequant(xb, eb)
+    return lorenzo_delta(dq, axes=range(n, 2 * n))
+
+
+def blocked_reconstruct(delta: jax.Array, eb: float, block: Sequence[int],
+                        orig_shape: Sequence[int], dtype=jnp.float32) -> jax.Array:
+    """cumsum inverse per block → merge → crop → dequant."""
+    n = len(block)
+    dq = lorenzo_reconstruct(delta, axes=range(n, 2 * n))
+    full = block_merge(dq, block)
+    crop = tuple(slice(0, s) for s in orig_shape)
+    return dequant(full[crop], eb, dtype)
+
+
+# ---------------------------------------------------------------------------
+# POSTQUANT code mapping + outliers (paper Algorithm 2).
+# Code 0 is reserved for OUTLIER; in-cap deltas map to 1..cap-1 around the
+# radius.  Outliers keep their exact integer delta in a sparse side channel
+# (DESIGN.md §2: delta-outliers keep the cumsum inverse linear & exact).
+# ---------------------------------------------------------------------------
+
+def postquant_codes(delta: jax.Array, cap: int) -> Tuple[jax.Array, jax.Array]:
+    """Map int32 deltas to quant codes in [0, cap). Returns (codes, in_cap)."""
+    radius = cap // 2
+    in_cap = (delta > -radius) & (delta < radius)
+    codes = jnp.where(in_cap, delta + radius, 0).astype(jnp.int32)
+    return codes, in_cap
+
+
+def codes_to_delta(codes: jax.Array, cap: int) -> jax.Array:
+    """In-cap codes back to deltas; outlier positions (code 0) become 0 and
+    are overwritten by the sparse outlier scatter."""
+    radius = cap // 2
+    return jnp.where(codes == 0, 0, codes - radius).astype(jnp.int32)
+
+
+def extract_outliers(delta_flat: jax.Array, in_cap_flat: jax.Array,
+                     capacity: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Gather up to `capacity` outlier (index, delta) pairs.
+
+    Returns (idx[int32, capacity] with -1 fill, val[int32, capacity],
+    n_outliers).  n_outliers > capacity means overflow (caller surfaces it;
+    capacity is a config, default 10% of N as in SZ practice).
+    """
+    n = delta_flat.shape[0]
+    n_out = jnp.sum(~in_cap_flat)
+    # fill with an out-of-range index: scatter mode="drop" ignores it
+    # (NB: -1 would WRAP to the last element in jax scatter semantics)
+    (idx,) = jnp.nonzero(~in_cap_flat, size=capacity, fill_value=n)
+    val = jnp.where(idx < n, delta_flat[jnp.clip(idx, 0, n - 1)], 0
+                    ).astype(jnp.int32)
+    return idx.astype(jnp.int32), val, n_out.astype(jnp.int32)
+
+
+def scatter_outliers(delta_flat: jax.Array, idx: jax.Array,
+                     val: jax.Array) -> jax.Array:
+    """Write exact outlier deltas back (mode=drop ignores the -1 fill)."""
+    return delta_flat.at[idx].set(val, mode="drop")

@@ -1,0 +1,89 @@
+"""Error-bounded KV-cache compression for long-context serving.
+
+PREQUANT applied to the decode-time KV cache: K/V are stored as int8 with
+per-(head, seq-block) scales, an explicit error bound of scale/2 per
+element, and dequantized on the fly inside attention.  For `decode_32k` /
+`long_500k` this shrinks the dominant serving memory term 4x (bf16->int8
+with fp32 scales amortized over SEQ_BLOCK elements).
+
+For Mamba/hybrid archs the same codec compresses the SSD state (it *is*
+the cache there — DESIGN.md §7).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+SEQ_BLOCK = 128          # scale granularity along the sequence axis
+_QMAX = 127.0
+
+
+class QuantKV(NamedTuple):
+    q: jax.Array          # int8, same shape as the source
+    scale: jax.Array      # f32, shape = source with seq axis / SEQ_BLOCK
+
+
+def kv_quantize(x: jax.Array, seq_axis: int) -> QuantKV:
+    """Blockwise int8 quantization along `seq_axis` (length must be a
+    multiple of SEQ_BLOCK; cache buffers are allocated that way)."""
+    s = x.shape[seq_axis]
+    assert s % SEQ_BLOCK == 0, (x.shape, seq_axis)
+    xb = _split(x, seq_axis)                     # [..., nb, SEQ_BLOCK, ...]
+    amax = jnp.max(jnp.abs(xb), axis=seq_axis + 1, keepdims=True)
+    scale = jnp.maximum(amax / _QMAX, 1e-30).astype(jnp.float32)
+    q = jnp.clip(jnp.rint(xb.astype(jnp.float32) / scale), -_QMAX, _QMAX
+                 ).astype(jnp.int8)
+    return QuantKV(_merge(q, seq_axis), jnp.squeeze(scale, seq_axis + 1))
+
+
+def kv_dequantize(qkv: QuantKV, seq_axis: int, dtype=jnp.bfloat16) -> jax.Array:
+    qb = _split(qkv.q, seq_axis)
+    x = qb.astype(jnp.float32) * jnp.expand_dims(qkv.scale, seq_axis + 1)
+    return _merge(x.astype(dtype), seq_axis)
+
+
+def kv_update_block(qkv: QuantKV, new: jax.Array, pos, seq_axis: int) -> QuantKV:
+    """Write `new` (one token slot, already sized [..,1,..] on seq_axis)
+    into the quantized cache at `pos`.  The owning SEQ_BLOCK's scale is
+    monotonically widened (never shrunk) so previously written tokens keep
+    their bound."""
+    blk = pos // SEQ_BLOCK
+    old_scale = jax.lax.dynamic_index_in_dim(qkv.scale, blk, seq_axis,
+                                             keepdims=True)
+    need = jnp.max(jnp.abs(new)).astype(jnp.float32) / _QMAX
+    new_scale = jnp.maximum(old_scale, jnp.maximum(need, 1e-30))
+    # requantize the block's existing tokens under the widened scale so
+    # their dequantized values are preserved (bound becomes new_scale/2)
+    old_blk = jax.lax.dynamic_slice_in_dim(qkv.q, blk * SEQ_BLOCK, SEQ_BLOCK,
+                                           seq_axis)
+    requant = jnp.clip(jnp.rint(old_blk.astype(jnp.float32)
+                                * (old_scale / new_scale)),
+                       -_QMAX, _QMAX).astype(jnp.int8)
+    q = jax.lax.dynamic_update_slice_in_dim(qkv.q, requant, blk * SEQ_BLOCK,
+                                            seq_axis)
+    qn = jnp.clip(jnp.rint(new.astype(jnp.float32) / new_scale),
+                  -_QMAX, _QMAX).astype(jnp.int8)
+    q = jax.lax.dynamic_update_index_in_dim(q, jnp.squeeze(qn, seq_axis),
+                                            pos, seq_axis)
+    scale = jax.lax.dynamic_update_slice_in_dim(qkv.scale, new_scale, blk,
+                                                seq_axis)
+    return QuantKV(q, scale)
+
+
+def error_bound(qkv: QuantKV) -> jax.Array:
+    """Per-block abs error bound = scale/2 (the paper's eb semantics)."""
+    return qkv.scale / 2.0
+
+
+def _split(x: jax.Array, seq_axis: int) -> jax.Array:
+    s = x.shape[seq_axis]
+    shp = x.shape[:seq_axis] + (s // SEQ_BLOCK, SEQ_BLOCK) + x.shape[seq_axis + 1:]
+    return x.reshape(shp)
+
+
+def _merge(xb: jax.Array, seq_axis: int) -> jax.Array:
+    shp = xb.shape[:seq_axis] + (xb.shape[seq_axis] * SEQ_BLOCK,) \
+        + xb.shape[seq_axis + 2:]
+    return xb.reshape(shp)

@@ -1,0 +1,45 @@
+"""Quality metrics used in the paper's evaluation (§4.2.2)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rmse(a, b) -> jax.Array:
+    a = jnp.asarray(a, jnp.float64 if jax.config.x64_enabled else jnp.float32)
+    b = jnp.asarray(b, a.dtype)
+    return jnp.sqrt(jnp.mean((a - b) ** 2))
+
+
+def psnr(orig, recon) -> jax.Array:
+    """PSNR = 20·log10((max−min)/RMSE)  (paper footnote 6)."""
+    rng = jnp.max(orig) - jnp.min(orig)
+    r = rmse(orig, recon)
+    return 20.0 * jnp.log10(jnp.where(r > 0, rng / r, jnp.inf))
+
+
+def max_abs_err(orig, recon) -> jax.Array:
+    return jnp.max(jnp.abs(jnp.asarray(orig) - jnp.asarray(recon)))
+
+
+def nrmse(orig, recon) -> jax.Array:
+    rng = jnp.max(orig) - jnp.min(orig)
+    return rmse(orig, recon) / rng
+
+
+def bitrate(n_elements: int, compressed_bytes: int) -> float:
+    """Bits per element (the x-axis of the paper's rate-distortion plots)."""
+    return compressed_bytes * 8.0 / n_elements
+
+
+def verify_error_bound(orig, recon, eb: float) -> bool:
+    """The paper's defining guarantee |d − d•| ≤ eb, up to float32
+    representability: the PREQUANT divide and the dequant multiply each
+    round once, so the mathematically-exact bound eb widens by
+    O(|d|·eps32).  (The paper's fp32 CPU SZ is subject to the same limit;
+    DESIGN.md §8.)"""
+    m = float(jax.device_get(max_abs_err(orig, recon)))
+    amax = float(jax.device_get(jnp.max(jnp.abs(orig))))
+    eps = float(np.finfo(np.float32).eps)
+    return m <= eb * (1.0 + 1e-5) + 4.0 * eps * amax + np.finfo(np.float32).tiny

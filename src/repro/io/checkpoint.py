@@ -1,0 +1,136 @@
+"""Checkpoint save/restore with the cuSZ codec on the write path.
+
+Modes:
+  'lossless' — raw arrays (npz)
+  'cusz'     — float arrays >= CUSZ_MIN_SIZE go through the full cuSZ
+               pipeline (dual-quant + canonical Huffman) at a value-range-
+               relative error bound; everything else stays lossless.
+               Manifest records eb + achieved ratio per tensor.
+
+Restore is elastic: leaves are placed with whatever shardings the *new*
+mesh prescribes (re-sharding on restore = the elastic-rescale path,
+DESIGN.md §5).  Writes go through a temp dir + atomic rename, and an
+optional background thread (async staging) so the step loop is not
+blocked.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.core import compressor as CZ
+
+CUSZ_MIN_SIZE = 4096
+_SEP = "::"
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree, mode: str = "lossless",
+                    eb_valrel: float = 1e-5, background: bool = False):
+    if background:
+        t = threading.Thread(target=save_checkpoint,
+                             args=(ckpt_dir, step, tree, mode, eb_valrel,
+                                   False), daemon=True)
+        t.start()
+        return t
+    flat = _flatten(tree)
+    tmp = os.path.join(ckpt_dir, f".tmp_step_{step:08d}")
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    os.makedirs(tmp, exist_ok=True)
+    manifest: Dict[str, Any] = {"step": step, "mode": mode, "tensors": {}}
+    arrays: Dict[str, np.ndarray] = {}
+    for key, arr in flat.items():
+        entry: Dict[str, Any] = {"shape": list(arr.shape),
+                                 "dtype": str(arr.dtype)}
+        if (mode == "cusz" and arr.dtype == np.float32
+                and arr.size >= CUSZ_MIN_SIZE and np.all(np.isfinite(arr))
+                and float(np.max(arr) - np.min(arr)) > 0):
+            cfg = CZ.CompressorConfig(eb=eb_valrel, eb_mode="valrel",
+                                      use_tpu_blocks=True)
+            blob, eb = CZ.compress(arr, cfg)
+            packed = CZ.pack_blob(blob)
+            # fall back to raw when the codec doesn't win (entropy-dense
+            # tensors, e.g. random init at tight eb, would expand)
+            if (int(blob.n_outliers) <= blob.out_idx.shape[0]
+                    and CZ.packed_nbytes(packed) < arr.nbytes):
+                entry.update(codec="cusz", eb=eb,
+                             chunk_size=cfg.chunk_size,
+                             ratio=arr.nbytes / CZ.packed_nbytes(packed))
+                for f, v in packed.items():
+                    arrays[f"{key}{_SEP}__cusz__{_SEP}{f}"] = np.asarray(v)
+                manifest["tensors"][key] = entry
+                continue
+        entry["codec"] = "raw"
+        arrays[key] = arr
+        manifest["tensors"][key] = entry
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_")]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(ckpt_dir: str, template, step: Optional[int] = None,
+                    shardings=None):
+    """template: pytree with the target treedef (e.g. fresh init or
+    eval_shape).  shardings: optional matching pytree of NamedSharding for
+    elastic placement on the current mesh."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        assert step is not None, f"no checkpoints under {ckpt_dir}"
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    arrays = np.load(os.path.join(d, "arrays.npz"))
+
+    def restore_one(key, entry):
+        if entry["codec"] == "cusz":
+            prefix = f"{key}{_SEP}__cusz__{_SEP}"
+            packed = {k[len(prefix):]: arrays[k] for k in arrays.files
+                      if k.startswith(prefix)}
+            blob = CZ.unpack_blob(packed)
+            cfg = CZ.CompressorConfig(eb=1.0, eb_mode="abs",
+                                      use_tpu_blocks=True,
+                                      chunk_size=entry.get("chunk_size", 4096))
+            out = CZ.decompress(blob, cfg, entry["eb"],
+                                tuple(entry["shape"]))
+            return np.asarray(jax.device_get(out))
+        return arrays[key]
+
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(template)[0]
+    treedef = jax.tree_util.tree_structure(template)
+    shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
+                    if shardings is not None else [None] * len(leaves_with_path))
+    out = []
+    for (path, leaf), shd in zip(leaves_with_path, shard_leaves):
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        arr = restore_one(key, manifest["tensors"][key]).astype(leaf.dtype)
+        arr = arr.reshape(leaf.shape)
+        out.append(jax.device_put(arr, shd) if shd is not None
+                   else jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out), step

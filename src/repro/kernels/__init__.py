@@ -1,0 +1,3 @@
+"""Pallas TPU kernels for cuSZ hot spots, each with ops.py (jit wrapper,
+impl switch) and ref.py (pure-jnp oracle validated by tests)."""
+from . import lorenzo, histogram, deflate  # noqa: F401

@@ -1,0 +1,16 @@
+"""Jit'd public wrapper for the deflate kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from . import kernel, ref
+
+
+@partial(jax.jit, static_argnames=("chunk_size", "impl", "interpret"))
+def deflate(cw, bw, chunk_size: int = 512, impl: str = "jax",
+            interpret: bool = True):
+    if impl == "pallas":
+        return kernel.deflate_pallas(cw, bw, chunk_size, interpret=interpret)
+    return ref.deflate_ref(cw, bw, chunk_size)

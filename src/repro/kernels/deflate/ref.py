@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the deflate kernel (= core/huffman.deflate)."""
+import jax
+
+from repro.core import huffman as hf
+
+
+def deflate_ref(cw: jax.Array, bw: jax.Array, chunk_size: int):
+    return hf.deflate(cw, bw, chunk_size)

@@ -1,0 +1,15 @@
+"""Jit'd public wrapper for the histogram kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from . import kernel, ref
+
+
+@partial(jax.jit, static_argnames=("nbins", "impl", "interpret"))
+def histogram(codes, nbins: int, impl: str = "jax", interpret: bool = True):
+    if impl == "pallas":
+        return kernel.histogram_pallas(codes, nbins, interpret=interpret)
+    return ref.histogram_ref(codes, nbins)

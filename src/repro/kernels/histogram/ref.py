@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for the histogram kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def histogram_ref(codes: jax.Array, nbins: int) -> jax.Array:
+    return jnp.bincount(codes.reshape(-1), length=nbins).astype(jnp.int32)

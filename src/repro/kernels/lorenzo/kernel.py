@@ -1,0 +1,111 @@
+"""Pallas TPU kernel: fused PREQUANT + Lorenzo delta + POSTQUANT.
+
+Tiling insight (DESIGN.md §2): cuSZ's prediction is *block-independent*
+(zero padding layer at every block boundary, paper §3.1.1), so the Pallas
+tile IS the cuSZ block — the BlockSpec decomposition needs no halo, and
+the grid is embarrassingly parallel exactly like the paper's CUDA blocks.
+
+One HBM->VMEM read of the f32 tile produces both int32 outputs in a single
+fused pass (the paper's motivation: the stage is memory-bound, so fusing
+prequant/predict/postquant maximizes bandwidth utilization).  Tiles default
+to lane-aligned shapes ((8,128) multiples for f32/int32).
+
+The reverse kernel computes the in-block N-D inclusive prefix sum (the
+cumsum inverse) + dequant, also one pass.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _shift1(x, axis):
+    """In-tile shift-by-one with zero fill (the padding layer)."""
+    zshape = list(x.shape)
+    zshape[axis] = 1
+    z = jnp.zeros(zshape, x.dtype)
+    sl = [slice(None)] * x.ndim
+    sl[axis] = slice(0, x.shape[axis] - 1)
+    return jnp.concatenate([z, x[tuple(sl)]], axis=axis)
+
+
+def _dualquant_kernel(nd, nbins, eb, x_ref, codes_ref, delta_ref):
+    x = x_ref[...]
+    dq = jnp.rint(x / (2.0 * eb)).astype(jnp.int32)           # PREQUANT
+    # (same division form as the oracle: reciprocal-multiply would flip
+    # rint ties and break bit-equality with ref.py)
+    delta = dq
+    for ax in range(x.ndim - nd, x.ndim):                     # ℓ-delta
+        delta = delta - _shift1(delta, ax)
+    radius = nbins // 2                                       # POSTQUANT
+    in_cap = (delta > -radius) & (delta < radius)
+    codes_ref[...] = jnp.where(in_cap, delta + radius, 0).astype(jnp.int32)
+    delta_ref[...] = delta
+
+
+def _reverse_kernel(nd, eb, delta_ref, out_ref):
+    d = delta_ref[...]
+    for ax in range(d.ndim - nd, d.ndim):                     # cumsum inverse
+        d = jnp.cumsum(d, axis=ax, dtype=jnp.int32)
+    out_ref[...] = d.astype(jnp.float32) * (2.0 * eb)
+
+
+def _grid_and_specs(xb_shape, nd, blocks_per_tile):
+    """Grid over leading block axes; each tile carries `blocks_per_tile`
+    blocks on the first block axis to keep VMEM tiles lane/sublane aligned
+    even for small paper blocks (e.g. 8x8x8)."""
+    nblk = xb_shape[:len(xb_shape) - nd]
+    blk = xb_shape[len(xb_shape) - nd:]
+    flat = 1
+    for b in nblk:
+        flat *= b
+    bpt = min(blocks_per_tile, flat)
+    while flat % bpt:
+        bpt -= 1
+    grid = (flat // bpt,)
+    tile = (bpt,) + blk
+    def idx(i):
+        return (i,) + (0,) * nd
+    spec = pl.BlockSpec((bpt,) + blk, idx)
+    return grid, tile, spec, (flat,) + blk
+
+
+def dualquant_blocks_pallas(xb: jax.Array, eb: float, nbins: int,
+                            blocks_per_tile: int = 64,
+                            interpret: bool = True):
+    """xb: [nb..., b...] float32 blocked input (block axes last nd)."""
+    nd = xb.ndim // 2
+    grid, tile, spec, flat_shape = _grid_and_specs(xb.shape, nd, blocks_per_tile)
+    xf = xb.reshape(flat_shape)
+    kern = functools.partial(_dualquant_kernel, nd, nbins, eb)
+    codes, delta = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[spec],
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct(flat_shape, jnp.int32),
+                   jax.ShapeDtypeStruct(flat_shape, jnp.int32)],
+        interpret=interpret,
+    )(xf)
+    return codes.reshape(xb.shape), delta.reshape(xb.shape)
+
+
+def reverse_blocks_pallas(delta: jax.Array, eb: float,
+                          blocks_per_tile: int = 64,
+                          interpret: bool = True) -> jax.Array:
+    nd = delta.ndim // 2
+    grid, tile, spec, flat_shape = _grid_and_specs(delta.shape, nd, blocks_per_tile)
+    df = delta.reshape(flat_shape)
+    kern = functools.partial(_reverse_kernel, nd, eb)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(flat_shape, jnp.float32),
+        interpret=interpret,
+    )(df)
+    return out.reshape(delta.shape)

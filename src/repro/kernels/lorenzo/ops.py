@@ -1,0 +1,31 @@
+"""Jit'd public wrapper for the Lorenzo dual-quant kernel.
+
+impl='jax'    -> pure-jnp oracle (XLA; works on any backend, used in the
+                 multi-pod dry-run where the TPU Pallas lowering is
+                 unavailable on the CPU host platform)
+impl='pallas' -> Pallas kernel (interpret=True on CPU for validation,
+                 compiled on real TPUs)
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from . import kernel, ref
+
+
+@partial(jax.jit, static_argnames=("eb", "nbins", "impl", "interpret"))
+def dualquant_blocks(xb, eb: float, nbins: int, impl: str = "jax",
+                     interpret: bool = True):
+    if impl == "pallas":
+        return kernel.dualquant_blocks_pallas(xb, eb, nbins,
+                                              interpret=interpret)
+    return ref.dualquant_blocks_ref(xb, eb, nbins)
+
+
+@partial(jax.jit, static_argnames=("eb", "impl", "interpret"))
+def reverse_blocks(delta, eb: float, impl: str = "jax", interpret: bool = True):
+    if impl == "pallas":
+        return kernel.reverse_blocks_pallas(delta, eb, interpret=interpret)
+    return ref.reverse_blocks_ref(delta, eb)

@@ -1,0 +1,1 @@
+from . import mesh  # noqa: F401  (dryrun NOT imported here: it sets XLA_FLAGS)

@@ -1,0 +1,359 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST be the first two lines, before ANY other import (jax locks the
+# device count on first init).  Everything below may import jax.
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import re                # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+from functools import partial  # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np       # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro import configs                       # noqa: E402
+from repro.configs.shapes import SHAPES, applicable  # noqa: E402
+from repro.dist import sharding as SH           # noqa: E402
+from repro.dist.context import use_mesh, use_param_specs  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import model as M             # noqa: E402
+from repro.optim import adamw                   # noqa: E402
+from repro.train.train_step import TrainConfig, make_train_step  # noqa: E402
+
+# TPU v5e constants for the roofline terms (EXPERIMENTS.md §Roofline)
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # B/s per chip
+ICI_BW = 50e9                # B/s per link (aggregate simplification)
+
+# dry-run knobs per arch (microbatching / quantized moments / accum dtype)
+ARCH_TRAIN = {
+    "mamba2-1.3b": dict(microbatches=2),
+    "moonshot-v1-16b-a3b": dict(microbatches=8),
+    "deepseek-v2-236b": dict(microbatches=16, quant_moments=True),
+    "jamba-1.5-large-398b": dict(microbatches=16, quant_moments=True,
+                                 accum_bf16=True),
+    "phi-3-vision-4.2b": dict(microbatches=4),
+    "qwen3-32b": dict(microbatches=16),
+    "qwen3-4b": dict(microbatches=4),
+    "granite-34b": dict(microbatches=16),
+    "qwen2.5-3b": dict(microbatches=4),
+    "musicgen-medium": dict(microbatches=2),
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^\s]*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def collective_bytes(hlo_text: str):
+    """Sum result-shape bytes of every collective in the (post-SPMD,
+    per-partition) HLO.  Returns (total_bytes, per-op dict, count dict)."""
+    per_op, counts = {}, {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shapes, op = m.group(1), m.group(2)
+        nbytes = 0
+        for sm in _SHAPE_RE.finditer(shapes):
+            dt, dims = sm.group(1), sm.group(2)
+            n = int(np.prod([int(d) for d in dims.split(",") if d])) if dims \
+                else 1
+            nbytes += n * _DTYPE_BYTES.get(dt, 4)
+        per_op[op] = per_op.get(op, 0) + nbytes
+        counts[op] = counts.get(op, 0) + 1
+    return sum(per_op.values()), per_op, counts
+
+
+def _cache_shard_rule(mesh, dp, long_ctx, path, leaf):
+    """Decode/prefill cache layout: batch over dp; KV/latent sequence over
+    'model' (or over 'data' for batch=1 long-context = SP); mamba state
+    heads over 'model'."""
+    names = [str(getattr(k, "key", getattr(k, "name", ""))) for k in path]
+    ndim = len(leaf.shape)
+    if "conv" in names:                       # [nP,B,K-1,conv_dim]
+        spec = P(None, dp if not long_ctx else None, None,
+                 "model" if leaf.shape[-1] % mesh.shape["model"] == 0
+                 else None)
+    elif "h" in names:                        # mamba [nP,B,H,N,P]
+        spec = P(None, dp if not long_ctx else None,
+                 "model" if leaf.shape[2] % mesh.shape["model"] == 0
+                 else None, None, None)
+    elif ndim == 4:                           # MLA latent [nP,B,S,R]
+        spec = P(None, dp if not long_ctx else None,
+                 "data" if long_ctx else "model", None)
+    else:                                     # KV [nP,B,S,kv,hd]
+        spec = P(None, dp if not long_ctx else None,
+                 "data" if long_ctx else "model", None, None)
+    return NamedSharding(mesh, spec)
+
+
+def _extra_specs(cfg, B, S, dtype=jnp.bfloat16):
+    extra = {}
+    if cfg.n_prepend_embeds:
+        extra["patch_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_prepend_embeds, cfg.d_model), dtype)
+    if cfg.add_frame_embeds:
+        extra["frame_embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                                     dtype)
+    return extra or None
+
+
+def input_specs(arch: str, shape_name: str, mesh, grad_compress="none",
+                weight_compress="none", microbatch_override=None,
+                kv_compress=False, a2a_compress="none"):
+    """ShapeDtypeStruct stand-ins + NamedShardings for one cell.
+
+    Returns (fn, args, in_shardings, donate_argnums, meta)."""
+    cfg = configs.get(arch)
+    shape = SHAPES[shape_name]
+    multi = "pod" in mesh.shape
+    dp = SH.dp_axes(mesh)
+    knobs = ARCH_TRAIN.get(arch, {})
+    pshapes = M.param_shapes(cfg)
+    pshard = SH.param_shardings(pshapes, mesh, fsdp=True)
+
+    if shape.kind == "train":
+        nmb = microbatch_override or knobs.get("microbatches", 1)
+        if multi:
+            nmb = min(nmb, 8)
+        tcfg = TrainConfig(
+            microbatches=nmb,
+            grad_compress=grad_compress if multi else "none",
+            weight_compress=weight_compress,
+            a2a_compress=a2a_compress,
+            npods=mesh.shape.get("pod", 1),
+            accum_dtype=jnp.bfloat16 if knobs.get("accum_bf16") else jnp.float32,
+            adamw=adamw.AdamWConfig(
+                quantized_moments=knobs.get("quant_moments", False)))
+        opt_shapes = jax.eval_shape(partial(adamw.init, cfg=tcfg.adamw),
+                                    pshapes)
+        oshard = SH.param_shardings(opt_shapes, mesh, fsdp=True)
+        B, S = shape.global_batch, shape.seq_len
+        podded = tcfg.grad_compress != "none" and tcfg.npods > 1
+        if podded:
+            toks = jax.ShapeDtypeStruct((tcfg.npods, B // tcfg.npods, S),
+                                        jnp.int32)
+        else:
+            toks = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        tshard = NamedSharding(mesh, SH.batch_spec(mesh, podded))
+        if podded:
+            extra = _extra_specs(cfg, B // tcfg.npods, S)
+            if extra:
+                extra = jax.tree.map(
+                    lambda s: jax.ShapeDtypeStruct((tcfg.npods,) + s.shape,
+                                                   s.dtype), extra)
+        else:
+            extra = _extra_specs(cfg, B, S)
+        step = make_train_step(cfg, tcfg)
+        args = (pshapes, opt_shapes, toks) + ((extra,) if extra else ())
+        eshard = jax.tree.map(lambda _: NamedSharding(
+            mesh, P("pod", "data", None, None) if podded
+            else P(dp, None, None)), extra) if extra else None
+        in_sh = (pshard, oshard, tshard) + ((eshard,) if extra else ())
+        out_sh = (NamedSharding(mesh, P()), pshard, oshard)
+        return step, args, in_sh, (0, 1), {"tcfg": str(tcfg)}, out_sh
+
+    if shape.kind == "prefill":
+        B, S = shape.global_batch, shape.seq_len
+        toks = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        extra = _extra_specs(cfg, B, S)
+
+        def prefill_fn(params, tokens, extra=None):
+            logits, caches = M.forward(params, cfg, tokens, extra,
+                                       collect_caches=True)
+            return logits[:, -1, :], caches
+
+        tshard = NamedSharding(mesh, P(dp, None))
+        eshard = jax.tree.map(lambda _: NamedSharding(mesh, P(dp, None, None)),
+                              extra) if extra else None
+        args = (pshapes, toks) + ((extra,) if extra else ())
+        in_sh = (pshard, tshard) + ((eshard,) if extra else ())
+        # pin the produced caches to the decode-input layout (batch over dp,
+        # cache seq over 'model') — without this XLA replicates the MLA
+        # latent cache (deepseek prefill: 140 GiB/dev, §Perf iteration 4)
+        out_caches = jax.eval_shape(
+            lambda p, t, e: prefill_fn(p, t, e)[1], pshapes, toks, extra) \
+            if extra else jax.eval_shape(
+                lambda p, t: prefill_fn(p, t)[1], pshapes, toks)
+        cshard = jax.tree_util.tree_map_with_path(
+            partial(_cache_shard_rule, mesh, dp, False), out_caches)
+        vshard = "model" if cfg.vocab % mesh.shape["model"] == 0 else None
+        out_sh = (NamedSharding(mesh, P(dp, vshard)), cshard)
+        return prefill_fn, args, in_sh, (), {}, out_sh
+
+    # decode
+    B, S = shape.global_batch, shape.seq_len
+    long_ctx = shape_name.startswith("long")
+    cache_shapes = jax.eval_shape(
+        partial(M.init_caches, cfg, B, S, jnp.bfloat16, kv_compress))
+    cshard = jax.tree_util.tree_map_with_path(
+        partial(_cache_shard_rule, mesh, dp, long_ctx), cache_shapes)
+    tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    tshard = NamedSharding(mesh, P(dp if not long_ctx else None, None))
+
+    def decode_fn(params, token, caches, cache_len):
+        return M.decode_step(params, cfg, token, caches, cache_len,
+                             compressed_kv=kv_compress)
+
+    args = (pshapes, tok, cache_shapes,
+            jax.ShapeDtypeStruct((), jnp.int32))
+    in_sh = (pshard, tshard, cshard, NamedSharding(mesh, P()))
+    # matching output shardings let the donated caches alias in place
+    # (without them the cache is double-buffered — §Perf iteration 5)
+    vshard = "model" if cfg.vocab % mesh.shape["model"] == 0 else None
+    out_sh = (NamedSharding(mesh, P(dp if not long_ctx else None, None,
+                                    vshard)), cshard)
+    return decode_fn, args, in_sh, (2,), {"long_ctx": long_ctx}, out_sh
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """6·N(_active)·D — the 'useful' FLOPs yardstick for §Roofline."""
+    cfg = configs.get(arch)
+    shape = SHAPES[shape_name]
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch          # decode: one token/slot
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             grad_compress: str = "none", out_dir: str = "results/dryrun",
+             force: bool = False, save_hlo: bool = False,
+             weight_compress: str = "none", microbatch_override=None,
+             kv_compress: bool = False, a2a_compress: str = "none"):
+    mesh_tag = "multipod" if multi_pod else "singlepod"
+    tag = f"{arch}__{shape_name}__{mesh_tag}" + (
+        f"__gc-{grad_compress}" if grad_compress != "none" else "") + (
+        f"__wc-{weight_compress}" if weight_compress != "none" else "") + (
+        f"__mb{microbatch_override}" if microbatch_override else "") + (
+        "__kvc" if kv_compress else "") + (
+        f"__a2a-{a2a_compress}" if a2a_compress != "none" else "")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, tag + ".json")
+    if os.path.exists(path) and not force:
+        print(f"[skip cached] {tag}")
+        return json.load(open(path))
+    cfg = configs.get(arch)
+    shape = SHAPES[shape_name]
+    if not applicable(shape, cfg):
+        rec = {"cell": tag, "status": "skipped",
+               "reason": "long_500k needs sub-quadratic sequence handling"}
+        json.dump(rec, open(path, "w"), indent=1)
+        print(f"[skip n/a] {tag}")
+        return rec
+
+    t0 = time.time()
+    rec = {"cell": tag, "arch": arch, "shape": shape_name, "mesh": mesh_tag,
+           "grad_compress": grad_compress}
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        fn, args, in_sh, donate, meta, out_sh = input_specs(
+            arch, shape_name, mesh, grad_compress, weight_compress,
+            microbatch_override, kv_compress, a2a_compress)
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=donate)
+        pspecs = SH.param_specs(M.param_shapes(cfg), mesh)
+        with use_mesh(mesh), use_param_specs(pspecs):
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        cbytes, per_op, counts = collective_bytes(hlo)
+        nchips = int(np.prod(list(mesh.shape.values())))
+        flops_dev = float(ca.get("flops", 0.0))
+        bytes_dev = float(sum(v for k, v in ca.items()
+                              if k.startswith("bytes accessed")))
+        mf = model_flops(arch, shape_name)
+        terms = {
+            "compute_s": flops_dev / PEAK_FLOPS,
+            "memory_s": bytes_dev / HBM_BW,
+            "collective_s": cbytes / ICI_BW,
+        }
+        dominant = max(terms, key=terms.get)
+        rec.update(
+            status="ok", meta=meta, n_chips=nchips,
+            lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+            memory=dict(
+                argument_GiB=mem.argument_size_in_bytes / 2**30,
+                output_GiB=mem.output_size_in_bytes / 2**30,
+                temp_GiB=mem.temp_size_in_bytes / 2**30,
+                alias_GiB=mem.alias_size_in_bytes / 2**30,
+                code_MiB=mem.generated_code_size_in_bytes / 2**20,
+                per_device_total_GiB=(mem.argument_size_in_bytes
+                                      + mem.output_size_in_bytes
+                                      + mem.temp_size_in_bytes
+                                      - mem.alias_size_in_bytes) / 2**30,
+            ),
+            flops_per_device=flops_dev,
+            hbm_bytes_per_device=bytes_dev,
+            collective_bytes_per_device=cbytes,
+            collective_by_op={k: v for k, v in sorted(per_op.items())},
+            collective_counts=counts,
+            roofline=dict(terms, dominant=dominant,
+                          bound_s=max(terms.values())),
+            model_flops_global=mf,
+            useful_flops_ratio=(mf / (flops_dev * nchips)
+                                if flops_dev else None),
+        )
+        if save_hlo:
+            hpath = os.path.join(out_dir, tag + ".hlo.txt")
+            with open(hpath, "w") as f:
+                f.write(hlo)
+            rec["hlo_path"] = hpath
+        print(f"[ok] {tag}  compile={t_compile:.0f}s  "
+              f"dom={dominant}({terms[dominant]*1e3:.1f}ms)  "
+              f"mem={rec['memory']['per_device_total_GiB']:.2f}GiB/dev")
+    except Exception as e:                        # noqa: BLE001
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+        print(f"[FAIL] {tag}: {type(e).__name__}: {e}")
+    json.dump(rec, open(path, "w"), indent=1, default=str)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="arch id (default: all)")
+    ap.add_argument("--shape", default=None, choices=[*SHAPES], help="shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--grad-compress", default="none",
+                    choices=["none", "int8", "int16"])
+    ap.add_argument("--weight-compress", default="none",
+                    choices=["none", "int8"])
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--kv-compress", action="store_true")
+    ap.add_argument("--a2a-compress", default="none", choices=["none", "int8"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    args = ap.parse_args()
+    archs = [args.arch] if args.arch else sorted(configs.ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    ok = True
+    for a in archs:
+        for s in shapes:
+            rec = run_cell(a, s, args.mesh == "multi", args.grad_compress,
+                           args.out, args.force, args.save_hlo,
+                           args.weight_compress, args.microbatches,
+                           args.kv_compress, args.a2a_compress)
+            ok &= rec.get("status") in ("ok", "skipped")
+    raise SystemExit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Serving launcher: batched prefill + decode loop.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --reduced \
+        --batch 4 --prompt-len 32 --new-tokens 32 --compressed-kv
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.models import model as M
+from repro.serve.engine import ServeConfig, generate
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--s-max", type=int, default=256)
+    ap.add_argument("--compressed-kv", action="store_true")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = configs.reduced(args.arch) if args.reduced else configs.get(args.arch)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab,
+                                      (args.batch, args.prompt_len))
+                         .astype(np.int32))
+    scfg = ServeConfig(s_max=args.s_max, compressed_kv=args.compressed_kv,
+                       temperature=args.temperature)
+    t0 = time.perf_counter()
+    toks = generate(params, cfg, prompt, args.new_tokens, scfg)
+    jax.block_until_ready(toks)
+    dt = time.perf_counter() - t0
+    print(f"arch={cfg.name} batch={args.batch} new={args.new_tokens} "
+          f"compressed_kv={args.compressed_kv}")
+    print(f"generated {toks.shape} in {dt:.2f}s "
+          f"({args.batch * args.new_tokens / dt:.1f} tok/s incl. compile)")
+    print("first sequence:", np.asarray(toks)[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

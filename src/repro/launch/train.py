@@ -1,0 +1,106 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b \
+        --reduced --steps 20 --batch 8 --seq 128
+
+On the production mesh (--mesh single|multi) the same script shards
+params/optimizer/batch per repro.dist.sharding and runs the jitted step;
+--reduced + --mesh host runs a real loop on this container's single CPU
+device.  --lower-only stops after compile (the dry-run path with real
+shapes)."""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.data import pipeline
+from repro.dist import sharding as SH
+from repro.dist.context import use_mesh, use_param_specs
+from repro.io import checkpoint as ckpt_io
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import model as M
+from repro.optim import adamw
+from repro.train.train_step import TrainConfig, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--mesh", default="host", choices=["host", "single", "multi"])
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--grad-compress", default="none",
+                    choices=["none", "int8", "int16"])
+    ap.add_argument("--weight-compress", default="none",
+                    choices=["none", "int8"])
+    ap.add_argument("--quantized-moments", action="store_true")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=100)
+    ap.add_argument("--lower-only", action="store_true")
+    args = ap.parse_args()
+
+    cfg = configs.reduced(args.arch) if args.reduced else configs.get(args.arch)
+    mesh = make_host_mesh() if args.mesh == "host" else \
+        make_production_mesh(multi_pod=args.mesh == "multi")
+    npods = mesh.shape.get("pod", 1)
+    tcfg = TrainConfig(
+        microbatches=args.microbatches, grad_compress=args.grad_compress,
+        weight_compress=args.weight_compress,
+        npods=npods,
+        adamw=adamw.AdamWConfig(lr=args.lr,
+                                quantized_moments=args.quantized_moments))
+    podded = tcfg.grad_compress != "none" and npods > 1
+
+    pspecs = SH.param_specs(M.param_shapes(cfg), mesh)
+    pshard = SH.param_shardings(M.param_shapes(cfg), mesh)
+    step_fn = jax.jit(make_train_step(cfg, tcfg),
+                      in_shardings=(pshard, None, None), donate_argnums=(0, 1))
+
+    with use_mesh(mesh), use_param_specs(pspecs):
+        if args.lower_only:
+            toks = jax.ShapeDtypeStruct(
+                (npods, args.batch // npods, args.seq) if podded
+                else (args.batch, args.seq), jnp.int32)
+            opt_shapes = jax.eval_shape(
+                lambda p: adamw.init(p, tcfg.adamw), M.param_shapes(cfg))
+            c = jax.jit(make_train_step(cfg, tcfg)).lower(
+                M.param_shapes(cfg), opt_shapes, toks).compile()
+            print("lowered+compiled OK;", c.memory_analysis())
+            return
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        params = jax.device_put(params, pshard)
+        opt = adamw.init(params, tcfg.adamw)
+        start = 0
+        if args.checkpoint_dir and ckpt_io.latest_step(args.checkpoint_dir) is not None:
+            (params, opt), start = ckpt_io.load_checkpoint(
+                args.checkpoint_dir, (params, opt))
+            start += 1
+            print(f"resumed from step {start}")
+        for step in range(start, args.steps):
+            batch = pipeline.global_batch(mesh, cfg.vocab, args.batch,
+                                          args.seq, step, podded=podded)
+            t0 = time.perf_counter()
+            loss, params, opt = step_fn(params, opt, batch)
+            loss.block_until_ready()
+            dt = time.perf_counter() - t0
+            if step % 5 == 0 or step == args.steps - 1:
+                tps = args.batch * args.seq / dt
+                print(f"step {step:5d}  loss {float(loss):.4f}  "
+                      f"{dt * 1e3:7.1f} ms  {tps:9.0f} tok/s")
+            if args.checkpoint_dir and (step + 1) % args.checkpoint_every == 0:
+                ckpt_io.save_checkpoint(args.checkpoint_dir, step,
+                                        (params, opt), mode="cusz")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from . import config, layers, attention, moe, ssm, model  # noqa: F401
+from .config import ModelConfig  # noqa: F401

@@ -1,0 +1,281 @@
+"""Attention: GQA/MQA (+qk_norm, +qkv bias), MLA (deepseek-v2), with a
+flash-style blocked implementation for long sequences and a decode path
+against (optionally int8-compressed) KV caches.
+
+The blocked "flash-scan" is pure JAX (lax.scan over KV blocks with online
+softmax), so it compiles on any backend — this is the path the multi-pod
+dry-run exercises.  On real TPUs the same interface can dispatch to a
+Pallas flash kernel; the cuSZ paper has no attention-kernel contribution,
+so we keep the XLA-native form as primary (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import apply_rope, rms_norm, dense_init
+from repro.core import kvcache as KVC
+
+Q_BLOCK = 1024
+KV_BLOCK = 1024
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def init_gqa_params(key, cfg: ModelConfig):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 8)
+    p = {
+        "wq": dense_init(ks[0], (d, h, hd)),
+        "wk": dense_init(ks[1], (d, kv, hd)),
+        "wv": dense_init(ks[2], (d, kv, hd)),
+        "wo": dense_init(ks[3], (h, hd, d), in_axis=(0, 1)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), jnp.float32)
+        p["bk"] = jnp.zeros((kv, hd), jnp.float32)
+        p["bv"] = jnp.zeros((kv, hd), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def init_mla_params(key, cfg: ModelConfig):
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": dense_init(ks[0], (d, m.q_lora_rank)),
+        "wq_b": dense_init(ks[1], (m.q_lora_rank, h, m.qk_nope_dim + m.qk_rope_dim)),
+        "wkv_a": dense_init(ks[2], (d, m.kv_lora_rank + m.qk_rope_dim)),
+        "wk_b": dense_init(ks[3], (m.kv_lora_rank, h, m.qk_nope_dim)),
+        "wv_b": dense_init(ks[4], (m.kv_lora_rank, h, m.v_head_dim)),
+        "wo": dense_init(ks[5], (h, m.v_head_dim, d), in_axis=(0, 1)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# flash-scan core
+# ---------------------------------------------------------------------------
+
+def _flash(q: jax.Array, k: jax.Array, v: jax.Array, causal: bool,
+           q_offset: int | jax.Array = 0) -> jax.Array:
+    """Blocked online-softmax attention.
+
+    q: [B, Sq, H, hd]; k/v: [B, Sk, KV, hd] (KV divides H).  Returns
+    [B, Sq, H, hd].  Memory is O(Sq·KV_BLOCK) per step instead of O(Sq·Sk).
+    """
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    vd = v.shape[-1]                                   # may differ (MLA)
+    g = H // KV
+    scale = 1.0 / np.sqrt(hd)
+    nkb = -(-Sk // KV_BLOCK)
+    pad_k = nkb * KV_BLOCK - Sk
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    kb = k.reshape(B, nkb, KV_BLOCK, KV, hd)
+    vb = v.reshape(B, nkb, KV_BLOCK, KV, vd)
+    qh = q.reshape(B, Sq, KV, g, hd)
+    q_pos = jnp.arange(Sq) + q_offset                      # [Sq]
+
+    def step(carry, blk):
+        acc, m, l = carry
+        kblk, vblk, bi = blk                               # [B,KB,KV,hd]
+        s = jnp.einsum("bqkgd,bckd->bqkgc", qh, kblk,
+                       preferred_element_type=jnp.float32) * scale
+        k_pos = bi * KV_BLOCK + jnp.arange(KV_BLOCK)
+        mask = k_pos[None, :] <= q_pos[:, None] if causal else \
+            jnp.ones((Sq, KV_BLOCK), bool)
+        mask = mask & (k_pos < Sk)[None, :]
+        s = jnp.where(mask[None, :, None, None, :], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(jnp.isfinite(m_new)[..., None], p, 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_new), 0.0)
+        l = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bqkgc,bckd->bqkgd", p.astype(v.dtype), vblk,
+                        preferred_element_type=jnp.float32)
+        acc = acc * corr[..., None] + pv
+        return (acc, m_new, l), None
+
+    acc0 = jnp.zeros((B, Sq, KV, g, vd), jnp.float32)
+    m0 = jnp.full((B, Sq, KV, g), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Sq, KV, g), jnp.float32)
+    # checkpoint the block step: backward recomputes the [Sq, KV_BLOCK]
+    # scores instead of stacking them for every block (flash-bwd memory;
+    # without this the scan saves O(S^2) residuals — §Perf iteration 7)
+    (acc, m, l), _ = jax.lax.scan(
+        jax.checkpoint(step), (acc0, m0, l0),
+        (kb.swapaxes(0, 1), vb.swapaxes(0, 1), jnp.arange(nkb)))
+    out = acc / jnp.maximum(l[..., None], 1e-20)
+    return out.reshape(B, Sq, H, vd).astype(q.dtype)
+
+
+def _flash_qblocked(q, k, v, causal):
+    """Outer scan over query blocks keeps the online-softmax state small
+    for very long prefill (32k+).  Non-multiple Sq (e.g. +256 VLM patch
+    tokens) is handled by padding queries at the end and slicing off."""
+    B, Sq, H, hd = q.shape
+    if Sq <= Q_BLOCK:
+        return _flash(q, k, v, causal)
+    pad = (-Sq) % Q_BLOCK
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nqb = q.shape[1] // Q_BLOCK
+    qb = q.reshape(B, nqb, Q_BLOCK, H, hd).swapaxes(0, 1)
+
+    def step(_, args):
+        qi, bi = args
+        o = _flash(qi, k, v, causal, q_offset=bi * Q_BLOCK)
+        return None, o
+
+    _, ob = jax.lax.scan(jax.checkpoint(step), None, (qb, jnp.arange(nqb)))
+    out = ob.swapaxes(0, 1).reshape(B, q.shape[1], H, ob.shape[-1])
+    return out[:, :Sq]
+
+
+# ---------------------------------------------------------------------------
+# GQA/MQA
+# ---------------------------------------------------------------------------
+
+def gqa_forward(p, cfg: ModelConfig, x: jax.Array, pos: jax.Array
+                ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Training / prefill.  x: [B,S,D].  Returns (out, (k, v)) with k/v in
+    cache layout [B, S, KV, hd]."""
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dke->bske", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dke->bske", x, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt); k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    o = _flash_qblocked(q, k, v, causal=True)
+    out = jnp.einsum("bshe,hed->bsd", o, p["wo"].astype(dt))
+    return out, (k, v)
+
+
+def gqa_decode(p, cfg: ModelConfig, x: jax.Array, cache_k, cache_v,
+               cache_len: jax.Array, compressed: bool = False):
+    """One-token decode.  x: [B,1,D]; cache_k/v: [B,Smax,KV,hd] (or QuantKV
+    when compressed).  Returns (out, new_cache_k, new_cache_v)."""
+    dt = x.dtype
+    B = x.shape[0]
+    pos = jnp.full((B, 1), cache_len, jnp.int32)
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dke->bske", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dke->bske", x, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt); k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+
+    if compressed:
+        cache_k = KVC.kv_update_block(cache_k, k, cache_len, seq_axis=1)
+        cache_v = KVC.kv_update_block(cache_v, v, cache_len, seq_axis=1)
+        kf = KVC.kv_dequantize(cache_k, seq_axis=1, dtype=dt)
+        vf = KVC.kv_dequantize(cache_v, seq_axis=1, dtype=dt)
+    else:
+        cache_k = jax.lax.dynamic_update_index_in_dim(cache_k, k[:, 0], cache_len, 1)
+        cache_v = jax.lax.dynamic_update_index_in_dim(cache_v, v[:, 0], cache_len, 1)
+        kf, vf = cache_k, cache_v
+
+    Smax = kf.shape[1]
+    KV = kf.shape[2]
+    g = cfg.n_heads // KV
+    scale = 1.0 / np.sqrt(cfg.head_dim)
+    qh = q.reshape(B, 1, KV, g, cfg.head_dim)
+    s = jnp.einsum("bqkgd,bskd->bqkgs", qh, kf,
+                   preferred_element_type=jnp.float32) * scale
+    valid = jnp.arange(Smax) <= cache_len
+    s = jnp.where(valid[None, None, None, None, :], s, -jnp.inf)
+    pattn = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqkgs,bskd->bqkgd", pattn.astype(dt), vf,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(B, 1, cfg.n_heads, cfg.head_dim).astype(dt)
+    out = jnp.einsum("bshe,hed->bsd", o, p["wo"].astype(dt))
+    return out, cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLA (deepseek-v2): the latent IS the cache
+# ---------------------------------------------------------------------------
+
+def mla_forward(p, cfg: ModelConfig, x: jax.Array, pos: jax.Array):
+    """Returns (out, latent_cache [B,S,kv_lora+rope])."""
+    m = cfg.mla
+    dt = x.dtype
+    B, S, _ = x.shape
+    ql = jnp.einsum("bsd,dr->bsr", x, p["wq_a"].astype(dt))
+    q = jnp.einsum("bsr,rhe->bshe", ql, p["wq_b"].astype(dt))
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
+
+    kv_a = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"].astype(dt))
+    latent, k_rope = jnp.split(kv_a, [m.kv_lora_rank], axis=-1)
+    k_rope = apply_rope(k_rope[:, :, None, :], pos, cfg.rope_theta)  # [B,S,1,rope]
+    k_nope = jnp.einsum("bsr,rhe->bshe", latent, p["wk_b"].astype(dt))
+    v = jnp.einsum("bsr,rhe->bshe", latent, p["wv_b"].astype(dt))
+
+    k_rope_b = jnp.broadcast_to(k_rope, (B, S, cfg.n_heads, m.qk_rope_dim))
+    qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+    kf = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    o = _flash_qblocked(qf, kf, v, causal=True)
+    out = jnp.einsum("bshe,hed->bsd", o, p["wo"].astype(dt))
+    return out, jnp.concatenate([latent, k_rope[:, :, 0, :]], axis=-1)
+
+
+def mla_decode(p, cfg: ModelConfig, x: jax.Array, cache: jax.Array,
+               cache_len: jax.Array):
+    """cache: [B, Smax, kv_lora+rope] latent cache (MLA's whole point: the
+    per-token cache is ~576 floats, already 'compressed'; cuSZ int8 can be
+    layered on top via serve config)."""
+    m = cfg.mla
+    dt = x.dtype
+    B = x.shape[0]
+    pos = jnp.full((B, 1), cache_len, jnp.int32)
+    ql = jnp.einsum("bsd,dr->bsr", x, p["wq_a"].astype(dt))
+    q = jnp.einsum("bsr,rhe->bshe", ql, p["wq_b"].astype(dt))
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
+
+    kv_a = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"].astype(dt))
+    latent, k_rope = jnp.split(kv_a, [m.kv_lora_rank], axis=-1)
+    k_rope = apply_rope(k_rope[:, :, None, :], pos, cfg.rope_theta)[:, :, 0, :]
+    entry = jnp.concatenate([latent, k_rope], axis=-1)
+    cache = jax.lax.dynamic_update_index_in_dim(cache, entry[:, 0], cache_len, 1)
+
+    lat_c, kr_c = cache[..., :m.kv_lora_rank], cache[..., m.kv_lora_rank:]
+    k_nope = jnp.einsum("bsr,rhe->bshe", lat_c, p["wk_b"].astype(dt))
+    v = jnp.einsum("bsr,rhe->bshe", lat_c, p["wv_b"].astype(dt))
+    scale = 1.0 / np.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+    s = jnp.einsum("bqhe,bshe->bqhs", q_nope, k_nope,
+                   preferred_element_type=jnp.float32)
+    s = s + jnp.einsum("bqhe,bse->bqhs", q_rope, kr_c,
+                       preferred_element_type=jnp.float32)
+    s = s * scale
+    Smax = cache.shape[1]
+    valid = jnp.arange(Smax) <= cache_len
+    s = jnp.where(valid[None, None, None, :], s, -jnp.inf)
+    pattn = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqhs,bshe->bqhe", pattn.astype(dt), v,
+                   preferred_element_type=jnp.float32).astype(dt)
+    out = jnp.einsum("bshe,hed->bsd", o, p["wo"].astype(dt))
+    return out, cache

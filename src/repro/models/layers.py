@@ -1,0 +1,43 @@
+"""Shared layer primitives: RMSNorm, RoPE, SwiGLU MLP, initializers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim)
+
+
+def apply_rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, hd]; pos: [..., S] int32 positions."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta))                  # [hd/2]
+    ang = pos[..., None].astype(jnp.float32) * freqs            # [..., S, hd/2]
+    cos = jnp.cos(ang)[..., None, :]                            # [..., S, 1, hd/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, w_gate.astype(x.dtype))
+    u = jnp.einsum("...d,df->...f", x, w_up.astype(x.dtype))
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("...f,fd->...d", h, w_down.astype(x.dtype))
+
+
+def dense_init(key, shape, in_axis=0):
+    fan_in = shape[in_axis] if isinstance(in_axis, int) else \
+        int(np.prod([shape[a] for a in in_axis]))
+    return jax.random.normal(key, shape, jnp.float32) / np.sqrt(fan_in)

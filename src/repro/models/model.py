@@ -1,0 +1,247 @@
+"""The LM: embedding -> scan over layer periods -> norm -> logits.
+
+One implementation covers all 10 assigned architectures via the config's
+layer-kind `pattern` (dense / MoE / MLA / Mamba2 / hybrid) with:
+  * `lax.scan` over periods (stacked params) — small HLO even at 88 layers;
+  * `jax.checkpoint` (remat) around each period — activation memory is
+    one period's boundary activations;
+  * heterogeneous periods (Jamba) unrolled inside the scan body;
+  * per-kind caches for decode (KV / MLA-latent / Mamba state), with
+    optional cuSZ int8 cache compression for GQA KV.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import attention as attn
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .config import ModelConfig
+from .layers import dense_init, rms_norm, swiglu
+from repro.core import kvcache as KVC
+from repro.core import weights as WQ
+from repro.dist.context import constrain, weight_gather_info
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_position(key, cfg: ModelConfig, kind: str) -> Dict[str, Any]:
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"pre_norm": jnp.ones((cfg.d_model,), jnp.float32)}
+    if kind.startswith("attn"):
+        p["attn"] = attn.init_mla_params(ks[0], cfg) if cfg.mla else \
+            attn.init_gqa_params(ks[0], cfg)
+    else:
+        p["mamba"] = ssm_mod.init_mamba_params(ks[0], cfg)
+    if kind.endswith("+mlp"):
+        p["mlp_norm"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p["mlp"] = {"w_up": dense_init(ks[2], (cfg.d_model, cfg.d_ff)),
+                    "w_down": dense_init(ks[3], (cfg.d_ff, cfg.d_model))}
+        if cfg.mlp_gated:
+            p["mlp"]["w_gate"] = dense_init(ks[1], (cfg.d_model, cfg.d_ff))
+    elif kind.endswith("+moe"):
+        p["mlp_norm"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p["moe"] = moe_mod.init_moe_params(ks[1], cfg)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    kp = jax.random.split(key, 3 + len(cfg.pattern))
+    params: Dict[str, Any] = {
+        "embed": jax.random.normal(kp[0], (cfg.vocab, cfg.d_model),
+                                   jnp.float32) * 0.02,
+        "out_norm": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(kp[1], (cfg.d_model, cfg.vocab))
+    layers = []
+    for i, kind in enumerate(cfg.pattern):
+        pk = jax.random.split(kp[3 + i], cfg.n_periods)
+        layers.append(jax.vmap(lambda k: _init_position(k, cfg, kind))(pk))
+    params["layers"] = layers
+    return params
+
+
+def param_shapes(cfg: ModelConfig):
+    """ShapeDtypeStruct pytree — no allocation (dry-run path)."""
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _position_forward(p, cfg: ModelConfig, kind: str, x, pos):
+    """One layer. Returns (x, cache_entry)."""
+    h = rms_norm(x, p["pre_norm"], cfg.norm_eps)
+    if kind.startswith("attn"):
+        if cfg.mla:
+            a, cache = attn.mla_forward(p["attn"], cfg, h, pos)
+        else:
+            a, cache = attn.gqa_forward(p["attn"], cfg, h, pos)
+    else:
+        a, cache = ssm_mod.mamba_forward(p["mamba"], cfg, h)
+    x = x + a
+    if kind.endswith("+mlp"):
+        h = rms_norm(x, p["mlp_norm"], cfg.norm_eps)
+        x = x + _mlp(p["mlp"], cfg, h)
+    elif kind.endswith("+moe"):
+        h = rms_norm(x, p["mlp_norm"], cfg.norm_eps)
+        x = x + moe_mod.moe_forward(p["moe"], cfg, h)
+    return x, cache
+
+
+def _mlp(m, cfg: ModelConfig, h):
+    if cfg.mlp_gated:
+        return swiglu(h, m["w_gate"], m["w_up"], m["w_down"])
+    u = jnp.einsum("...d,df->...f", h, m["w_up"].astype(h.dtype))
+    return jnp.einsum("...f,fd->...d", jax.nn.gelu(u),
+                      m["w_down"].astype(h.dtype))
+
+
+def forward(params, cfg: ModelConfig, tokens: jax.Array,
+            extra: Optional[Dict[str, jax.Array]] = None,
+            compute_dtype=jnp.bfloat16, collect_caches: bool = False,
+            return_hidden: bool = False):
+    """tokens: [B,S] int32.  extra: modality stubs (patch/frame embeds).
+    Returns (logits [B,S_total,V] fp32, caches or None); with
+    return_hidden=True returns the post-norm hidden [B,S_total,D] instead
+    of logits (the chunked-CE path avoids materializing [B,S,V])."""
+    B, S = tokens.shape
+    x = params["embed"][tokens].astype(compute_dtype)
+    if cfg.add_frame_embeds and extra and "frame_embeds" in extra:
+        x = x + extra["frame_embeds"].astype(compute_dtype)
+    if cfg.n_prepend_embeds and extra and "patch_embeds" in extra:
+        x = jnp.concatenate(
+            [extra["patch_embeds"].astype(compute_dtype), x], axis=1)
+    S_total = x.shape[1]
+    x = constrain(x, "dp", None, None)
+    pos = jnp.broadcast_to(jnp.arange(S_total, dtype=jnp.int32)[None, :],
+                           (B, S_total))
+
+    kinds = cfg.pattern
+
+    wg = weight_gather_info()
+
+    def period_body(x, period_params):
+        if wg is not None:
+            # int8 weight-gather hook (inside the scan: one period's
+            # weights resident gathered at a time — §Perf iteration A2)
+            specs_tuple, mesh_ = wg
+            period_params = tuple(
+                WQ.gather_dequant_tree(pp, sp, mesh_)
+                for pp, sp in zip(period_params, specs_tuple))
+        caches = []
+        for i, kind in enumerate(kinds):
+            x, c = _position_forward(period_params[i], cfg, kind, x, pos)
+            caches.append(c)
+        x = constrain(x, "dp", None, None)
+        return x, tuple(caches) if collect_caches else None
+
+    body = jax.checkpoint(period_body,
+                          policy=jax.checkpoint_policies.nothing_saveable)
+    x, caches = jax.lax.scan(body, x, tuple(params["layers"]))
+
+    x = rms_norm(x, params["out_norm"], cfg.norm_eps)
+    if return_hidden:
+        return x, caches
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(compute_dtype))
+    logits = constrain(logits, "dp", None, "model")
+    return logits.astype(jnp.float32), caches
+
+
+def lm_head_of(params, cfg: ModelConfig):
+    return params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+class DecodeCaches(NamedTuple):
+    """Tuple-aligned with cfg.pattern; each entry stacked over periods."""
+    entries: Tuple[Any, ...]
+
+
+def init_caches(cfg: ModelConfig, batch: int, s_max: int,
+                dtype=jnp.bfloat16, compressed_kv: bool = False) -> DecodeCaches:
+    nP = cfg.n_periods
+    entries = []
+    for kind in cfg.pattern:
+        if kind.startswith("attn"):
+            if cfg.mla:
+                m = cfg.mla
+                entries.append(jnp.zeros(
+                    (nP, batch, s_max, m.kv_lora_rank + m.qk_rope_dim), dtype))
+            elif compressed_kv:
+                kq = KVC.QuantKV(
+                    jnp.zeros((nP, batch, s_max, cfg.n_kv_heads, cfg.head_dim),
+                              jnp.int8),
+                    jnp.full((nP, batch, s_max // KVC.SEQ_BLOCK,
+                              cfg.n_kv_heads, cfg.head_dim), 1e-30, jnp.float32))
+                entries.append((kq, kq))
+            else:
+                z = jnp.zeros((nP, batch, s_max, cfg.n_kv_heads, cfg.head_dim),
+                              dtype)
+                entries.append((z, z))
+        else:
+            s = cfg.ssm
+            d_in = s.expand * cfg.d_model
+            H = d_in // s.head_dim
+            entries.append(ssm_mod.MambaState(
+                jnp.zeros((nP, batch, H, s.d_state, s.head_dim), jnp.float32),
+                jnp.zeros((nP, batch, s.conv_kernel - 1, d_in + 2 * s.d_state),
+                          dtype)))
+    return DecodeCaches(tuple(entries))
+
+
+def decode_step(params, cfg: ModelConfig, token: jax.Array,
+                caches: DecodeCaches, cache_len: jax.Array,
+                compute_dtype=jnp.bfloat16, compressed_kv: bool = False):
+    """token: [B,1] int32; caches as from init_caches/prefill.
+    Returns (logits [B,1,V], new DecodeCaches)."""
+    x = params["embed"][token].astype(compute_dtype)
+    kinds = cfg.pattern
+
+    def period_body(x, scanned):
+        period_params, period_caches = scanned
+        new_caches = []
+        for i, kind in enumerate(kinds):
+            p = period_params[i]
+            h = rms_norm(x, p["pre_norm"], cfg.norm_eps)
+            c = period_caches[i]
+            if kind.startswith("attn"):
+                if cfg.mla:
+                    a, nc = attn.mla_decode(p["attn"], cfg, h, c, cache_len)
+                else:
+                    ck, cv = c
+                    a, nck, ncv = attn.gqa_decode(
+                        p["attn"], cfg, h, ck, cv, cache_len,
+                        compressed=compressed_kv)
+                    nc = (nck, ncv)
+            else:
+                a, nc = ssm_mod.mamba_decode(p["mamba"], cfg, h, c)
+            x = x + a
+            if kind.endswith("+mlp"):
+                hm = rms_norm(x, p["mlp_norm"], cfg.norm_eps)
+                x = x + _mlp(p["mlp"], cfg, hm)
+            elif kind.endswith("+moe"):
+                hm = rms_norm(x, p["mlp_norm"], cfg.norm_eps)
+                x = x + moe_mod.moe_forward(p["moe"], cfg, hm)
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    x, new_entries = jax.lax.scan(period_body, x,
+                                  (tuple(params["layers"]), caches.entries))
+    x = rms_norm(x, params["out_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(compute_dtype))
+    return logits.astype(jnp.float32), DecodeCaches(new_entries)

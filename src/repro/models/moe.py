@@ -1,0 +1,176 @@
+"""Mixture-of-Experts with sort-based dropped-token dispatch (EP-friendly).
+
+Routing, sorting and capacity are all PER BATCH ROW (GShard/Switch-style
+groups): each [S] row sorts its own S·top_k assignments and keeps the
+first `cap = S·top_k/E·cf` per expert.  Nothing ever crosses rows except
+the expert einsum itself, so with batch sharded over 'data' and experts
+over 'model' the only collective is the dispatch/combine all-to-all —
+a *global* token sort would be unshardable and forces SPMD to replicate
+the full [T·k, D] flattened batch (observed: 120 GiB/device on the
+deepseek-v2 prefill dry-run; see EXPERIMENTS.md §Perf iteration 6).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense_init, swiglu
+from repro.dist.context import constrain, current_mesh, a2a_compress_active
+
+def _qblock(d: int) -> int:
+    """Largest power-of-two block (16..128) dividing d; 0 if none."""
+    for b in (128, 64, 32, 16):
+        if d % b == 0:
+            return b
+    return 0
+
+
+def _q8(x, blk):
+    """Blockwise int8 quantize along the last dim (PREQUANT, eb=scale/2)."""
+    nb = x.shape[-1] // blk
+    xf = x.astype(jnp.float32).reshape(x.shape[:-1] + (nb, blk))
+    scale = jnp.maximum(jnp.max(jnp.abs(xf), axis=-1) / 127.0, 1e-30)
+    q = jnp.clip(jnp.rint(xf / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q.reshape(x.shape), scale
+
+
+def _dq8(q, scale, blk, dtype):
+    nb = scale.shape[-1]
+    xf = q.astype(jnp.float32).reshape(q.shape[:-1] + (nb, blk))
+    return (xf * scale[..., None]).reshape(q.shape).astype(dtype)
+
+
+def _compressed_reshard(x, to_spec, from_spec):
+    """Reshard with the int8 representation on the wire, both directions:
+    forward quantizes -> reshards to `to_spec` (all-to-all in s8) ->
+    dequantizes; the custom_vjp backward quantizes the cotangent and
+    reshards it back to `from_spec` in s8 (error-bounded both ways; the
+    paper's PREQUANT on the EP dispatch/combine path)."""
+    mesh = current_mesh()
+    blk = _qblock(x.shape[-1])
+    if mesh is None or blk == 0:
+        return constrain(x, *to_spec)
+    from repro.dist.context import constrain as _c
+
+    @jax.custom_vjp
+    def reshard(v):
+        # pin the producer side first: without this the scatter that built
+        # v fuses the layout change into its own (f32) collective and the
+        # int8 hop below becomes a no-op
+        v = _c(v, *from_spec)
+        q, s = _q8(v, blk)
+        q = _c(q, *to_spec)
+        s = _c(s, *to_spec)              # scale: same rank, last dim = blocks
+        return _dq8(q, s, blk, v.dtype)
+
+    def fwd(v):
+        return reshard(v), None
+
+    def bwd(_, g):
+        g = _c(g, *to_spec)
+        gq, gs = _q8(g, blk)
+        gq = _c(gq, *from_spec)
+        gs = _c(gs, *from_spec)
+        return (_dq8(gq, gs, blk, g.dtype),)
+
+    reshard.defvjp(fwd, bwd)
+    return reshard(x)
+
+
+def init_moe_params(key, cfg: ModelConfig):
+    m = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, m.n_experts)),
+        "w_gate": dense_init(ks[1], (m.n_experts, d, m.d_ff)) / (cfg.n_layers ** 0.5),
+        "w_up": dense_init(ks[2], (m.n_experts, d, m.d_ff)),
+        "w_down": dense_init(ks[3], (m.n_experts, m.d_ff, d), in_axis=(0, 1)),
+    }
+    if m.n_shared:
+        sk = jax.random.split(ks[4], 3)
+        f = m.d_ff * m.n_shared
+        p["shared"] = {"w_gate": dense_init(sk[0], (d, f)),
+                       "w_up": dense_init(sk[1], (d, f)),
+                       "w_down": dense_init(sk[2], (f, d))}
+    return p
+
+
+def moe_forward(p, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """x: [B,S,D] -> [B,S,D].  Row-local dropped-token top-k routing."""
+    m = cfg.moe
+    B, S, D = x.shape
+    dt = x.dtype
+    E, k = m.n_experts, m.top_k
+    A = S * k
+
+    logits = jnp.einsum("bsd,de->bse", x, p["router"].astype(dt)
+                        ).astype(jnp.float32)
+    gates, eidx = jax.lax.top_k(logits, k)                   # [B,S,k]
+    gates = jax.nn.softmax(gates, axis=-1)
+
+    flat_e = eidx.reshape(B, A)                              # expert per slot
+    flat_t = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(S, dtype=jnp.int32), k)[None, :], (B, A))
+    flat_g = gates.reshape(B, A)
+
+    order = jnp.argsort(flat_e, axis=1, stable=True)         # group by expert
+    se = jnp.take_along_axis(flat_e, order, axis=1)
+    st = jnp.take_along_axis(flat_t, order, axis=1)
+    sg = jnp.take_along_axis(flat_g, order, axis=1)
+    counts = jax.vmap(lambda e: jnp.bincount(e, length=E))(se)    # [B,E]
+    starts = jnp.cumsum(counts, axis=1) - counts
+    rank = jnp.arange(A, dtype=jnp.int32)[None, :] \
+        - jnp.take_along_axis(starts, se, axis=1)
+
+    cap = max(8, int(A / E * m.capacity_factor))
+    cap = min(cap, A)
+    keep = rank < cap
+    slot = jnp.where(keep, se * cap + rank, E * cap)          # OOB -> dropped
+
+    # dispatch: [B, E, cap, D], rows local, then reshard experts onto EP.
+    # vmap'd scatter => batched scatter dims the SPMD partitioner keeps
+    # row-sharded (an explicit [B,A] index array degrades to a full
+    # all-gather of the token·top_k expansion — §Perf iteration 6b)
+    gathered = jnp.where(keep[..., None],
+                         jnp.take_along_axis(x, st[..., None], axis=1), 0)
+
+    def row_scatter(vals, sl):
+        return jnp.zeros((E * cap + 1, D), dt).at[sl].add(vals, mode="drop")
+
+    disp = jax.vmap(row_scatter)(gathered, slot)
+    disp = disp[:, :E * cap, :].reshape(B, E, cap, D)
+    row_spec = ("dp", None, None, None)
+    ep_spec = ("dp", "model", None, None)
+    if a2a_compress_active():                                 # s8 all-to-all
+        disp = _compressed_reshard(disp, ep_spec, row_spec)
+    else:
+        disp = constrain(disp, *ep_spec)                      # all-to-all
+
+    h_g = jnp.einsum("becd,edf->becf", disp, p["w_gate"].astype(dt))
+    h_u = jnp.einsum("becd,edf->becf", disp, p["w_up"].astype(dt))
+    h = jax.nn.silu(h_g) * h_u
+    eo = jnp.einsum("becf,efd->becd", h, p["w_down"].astype(dt))
+    if a2a_compress_active():
+        eo = _compressed_reshard(eo, row_spec, ep_spec)       # back to rows
+    else:
+        eo = constrain(eo, *row_spec)
+    eo = eo.reshape(B, E * cap, D)
+
+    # combine: gather each kept slot's output, weight, scatter to its token
+    vals = jnp.take_along_axis(eo, jnp.minimum(slot, E * cap - 1)[..., None],
+                               axis=1)
+    contrib = jnp.where(keep[..., None], vals * sg[..., None].astype(dt), 0)
+
+    def row_combine(c, t):
+        return jnp.zeros((S, D), dt).at[t].add(c, mode="drop")
+
+    out = jax.vmap(row_combine)(contrib, st)
+
+    if m.n_shared:
+        sp = p["shared"]
+        out = out + swiglu(x, sp["w_gate"], sp["w_up"], sp["w_down"])
+    return out

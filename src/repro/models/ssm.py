@@ -1,0 +1,220 @@
+"""Mamba2 SSD (state-space duality) block: chunked quadratic-intra /
+linear-inter scan for training+prefill, O(1) recurrent step for decode.
+
+Faithful to the SSD formulation (scalar A per head, shared B/C across
+heads, causal conv on x/B/C, gated RMSNorm) in pure JAX: the intra-chunk
+term is a masked [Q,Q] matmul (MXU-friendly), the inter-chunk term is a
+`lax.scan` over chunk states — exactly the parallelism structure the SSD
+paper derives, which is also the TPU-native one.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import dense_init, rms_norm
+
+
+def init_mamba_params(key, cfg: ModelConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    H = d_in // s.head_dim
+    N = s.d_state
+    ks = jax.random.split(key, 4)
+    conv_dim = d_in + 2 * N
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * d_in + 2 * N + H)),
+        "conv_w": dense_init(ks[1], (s.conv_kernel, conv_dim)) * 0.1,
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((H,), 1e-2, jnp.float32))),
+        "gate_norm": jnp.ones((d_in,), jnp.float32),
+        "out_proj": dense_init(ks[2], (d_in, d)),
+    }
+
+
+class MambaState(NamedTuple):
+    h: jax.Array          # [B, H, N, P] SSM state
+    conv: jax.Array       # [B, K-1, conv_dim] causal-conv tail
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x: [B,S,C]; depthwise causal conv, kernel K."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :].astype(x.dtype)
+              for i in range(K))
+    return jax.nn.silu(out + b.astype(x.dtype))
+
+
+def _split_proj(zxbcdt, cfg):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    H = d_in // s.head_dim
+    N = s.d_state
+    z, x, Bm, Cm, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + N, 2 * d_in + 2 * N], axis=-1)
+    return z, x, Bm, Cm, dt, d_in, H, N
+
+
+HEAD_BLOCK = 8          # heads per intra-chunk block (bounds the [Q,Q,hb]
+                        # score tensor; see DESIGN.md §5 memory notes)
+SEG_CHUNKS = 32         # chunks per sequence segment (outer scan carries
+                        # the SSM state => O(SEG) activation memory even
+                        # for 32k/500k prefill)
+
+
+def _ssd_segment(xc, Bc, Cc, lc, h0):
+    """SSD over one segment of chunks.
+
+    xc: [B,nC,Q,H,P] (already dt-scaled, f32); Bc/Cc: [B,nC,Q,N];
+    lc: [B,nC,Q,H] in-chunk cumulative log decay; h0: [B,H,N,P] carry.
+    Returns (y [B,nC,Q,H,P], hT)."""
+    B_, nC, Q, H, P = xc.shape
+    total = lc[:, :, -1, :]                                   # [B,nC,H]
+
+    cb = jnp.einsum("bcqn,bcun->bcqu", Cc, Bc,
+                    preferred_element_type=jnp.float32)       # [B,nC,Q,U]
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    cbm = jnp.where(tri[None, None], cb, 0.0)
+
+    # intra-chunk per head-block (keeps [Q,U,hb] bounded)
+    hb = HEAD_BLOCK if H % HEAD_BLOCK == 0 else 1
+    nHB = H // hb
+    lc_b = jnp.moveaxis(lc.reshape(B_, nC, Q, nHB, hb), 3, 0)   # [HB,B,nC,Q,hb]
+    xc_b = jnp.moveaxis(xc.reshape(B_, nC, Q, nHB, hb, P), 3, 0)
+
+    def hb_body(_, args):
+        l_b, x_b = args
+        seg = l_b[:, :, :, None, :] - l_b[:, :, None, :, :]     # [B,nC,Q,U,hb]
+        scores = cbm[..., None] * jnp.exp(seg)
+        y_b = jnp.einsum("bcquh,bcuhp->bcqhp", scores, x_b,
+                         preferred_element_type=jnp.float32)
+        return None, y_b
+
+    # checkpoint: backward recomputes per-head-block scores (otherwise the
+    # scan stacks the full [Q,U,H] segsum tensor as residuals)
+    _, y_intra_b = jax.lax.scan(jax.checkpoint(hb_body), None, (lc_b, xc_b))
+    y_intra = jnp.moveaxis(y_intra_b, 0, 3).reshape(B_, nC, Q, H, P)
+
+    # chunk states: S_c = sum_u exp(total - l_u) B_u x_u^T   [B,nC,H,N,P]
+    decay_to_end = jnp.exp(total[:, :, None, :] - lc)           # [B,nC,Q,H]
+    Sc = jnp.einsum("bcun,bcuh,bcuhp->bchnp", Bc, decay_to_end, xc,
+                    preferred_element_type=jnp.float32)
+
+    def step(h, args):
+        sc, tot = args
+        h_out = h                                               # state BEFORE chunk
+        h = h * jnp.exp(tot)[:, :, None, None] + sc
+        return h, h_out
+
+    hT, h_prev = jax.lax.scan(step, h0,
+                              (Sc.swapaxes(0, 1), total.swapaxes(0, 1)))
+    h_prev = h_prev.swapaxes(0, 1)                              # [B,nC,H,N,P]
+
+    y_inter = jnp.einsum("bcqn,bcqh,bchnp->bcqhp",
+                         Cc, jnp.exp(lc), h_prev,
+                         preferred_element_type=jnp.float32)
+    return y_intra + y_inter, hT
+
+
+def mamba_forward(p, cfg: ModelConfig, u: jax.Array
+                  ) -> Tuple[jax.Array, MambaState]:
+    """u: [B,S,D].  Returns (out [B,S,D], final MambaState for decode).
+
+    Long sequences run as an outer scan over segments (SEG_CHUNKS·chunk
+    tokens) carrying the SSM state — the parallel SSD form within each
+    segment, linear recurrence across segments."""
+    s = cfg.ssm
+    dt_ = u.dtype
+    B_, S, D = u.shape
+    zxbcdt = jnp.einsum("bsd,dz->bsz", u, p["in_proj"].astype(dt_))
+    z, x, Bm, Cm, dtp, d_in, H, N = _split_proj(zxbcdt, cfg)
+
+    conv_in = jnp.concatenate([x, Bm, Cm], axis=-1)
+    conv_out = _causal_conv(conv_in, p["conv_w"], p["conv_b"])
+    x, Bm, Cm = jnp.split(conv_out, [d_in, d_in + N], axis=-1)
+
+    P = s.head_dim
+    xh = x.reshape(B_, S, H, P)
+    dt = jax.nn.softplus(dtp.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])          # [B,S,H]
+    A = -jnp.exp(p["A_log"])                                      # [H]
+    dA = dt * A[None, None, :]                                    # log decay
+    xdt = xh.astype(jnp.float32) * dt[..., None]
+
+    Q = min(s.chunk, S)
+    assert S % Q == 0, (S, Q)
+    nC = S // Q
+    seg_c = min(SEG_CHUNKS, nC)
+    assert nC % seg_c == 0, (nC, seg_c)
+    nseg = nC // seg_c
+
+    def shape_seg(t, extra):
+        return t.reshape((B_, nseg, seg_c, Q) + extra).swapaxes(0, 1)
+
+    xs = shape_seg(xdt, (H, P))
+    Bs = shape_seg(Bm.astype(jnp.float32), (N,))
+    Cs = shape_seg(Cm.astype(jnp.float32), (N,))
+    ls = jnp.cumsum(dA.reshape(B_, nseg, seg_c, Q, H), axis=3).swapaxes(0, 1)
+
+    def seg_body(h, args):
+        xc, Bc, Cc, lc = args
+        y, hT = _ssd_segment(xc, Bc, Cc, lc, h)
+        return hT, y
+
+    h0 = jnp.zeros((B_, H, N, P), jnp.float32)
+    hT, ys = jax.lax.scan(jax.checkpoint(seg_body), h0, (xs, Bs, Cs, ls))
+    y = ys.swapaxes(0, 1).reshape(B_, S, H, P)
+
+    y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(B_, S, d_in).astype(dt_)
+
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("bsz,zd->bsd", y, p["out_proj"].astype(dt_))
+
+    K = s.conv_kernel
+    conv_tail = jnp.pad(conv_in, ((0, 0), (K - 1, 0), (0, 0)))[:, -(K - 1):, :]
+    return out, MambaState(hT, conv_tail)
+
+
+def mamba_decode(p, cfg: ModelConfig, u: jax.Array, state: MambaState
+                 ) -> Tuple[jax.Array, MambaState]:
+    """u: [B,1,D]; O(1) recurrent step (the long_500k path)."""
+    s = cfg.ssm
+    dt_ = u.dtype
+    B_ = u.shape[0]
+    zxbcdt = jnp.einsum("bsd,dz->bsz", u, p["in_proj"].astype(dt_))
+    z, x, Bm, Cm, dtp, d_in, H, N = _split_proj(zxbcdt, cfg)
+
+    conv_in = jnp.concatenate([x, Bm, Cm], axis=-1)               # [B,1,C]
+    K = s.conv_kernel
+    window = jnp.concatenate([state.conv, conv_in], axis=1)       # [B,K,C]
+    w = p["conv_w"].astype(dt_)
+    conv_out = jax.nn.silu(jnp.einsum("bkc,kc->bc", window, w)
+                           + p["conv_b"].astype(dt_))[:, None, :]
+    x, Bm, Cm = jnp.split(conv_out, [d_in, d_in + N], axis=-1)
+
+    P = s.head_dim
+    xh = x.reshape(B_, 1, H, P)[:, 0]                             # [B,H,P]
+    dt = jax.nn.softplus(dtp.astype(jnp.float32)[:, 0] + p["dt_bias"][None, :])
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt * A[None, :])                                  # [B,H]
+    Bv = Bm[:, 0].astype(jnp.float32)                             # [B,N]
+    Cv = Cm[:, 0].astype(jnp.float32)
+    xdt = xh.astype(jnp.float32) * dt[..., None]
+
+    h = state.h * a[:, :, None, None] \
+        + jnp.einsum("bn,bhp->bhnp", Bv, xdt)
+    y = jnp.einsum("bn,bhnp->bhp", Cv, h)
+    y = y + xh.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(B_, 1, d_in).astype(dt_)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("bsz,zd->bsd", y, p["out_proj"].astype(dt_))
+    return out, MambaState(h, window[:, 1:, :])

@@ -1,0 +1,106 @@
+"""AdamW with optional int8 block-quantized moments (the paper's PREQUANT
+applied to optimizer state — halves-to-quarters the resident bytes of m/v,
+which is what lets the 236B/398B configs fit 16 GB/chip; see DESIGN.md §5
+and the dry-run memory analysis)."""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+QBLOCK = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    quantized_moments: bool = False   # int8 m/v (large models)
+
+
+class QTensor(NamedTuple):
+    """Blockwise int8 tensor, same shape as the source (so it inherits the
+    source's sharding rule); scales are per-QBLOCK along the last dim."""
+    q: jax.Array        # int8, x.shape
+    scale: jax.Array    # f32,  x.shape[:-1] + (last/QBLOCK,)
+
+
+def _quantizable(x) -> bool:
+    return x.ndim >= 1 and x.shape[-1] % QBLOCK == 0 and x.size >= 4096
+
+
+def _quantize(x: jax.Array):
+    if not _quantizable(x):
+        return x.astype(jnp.float32)          # tiny leaves stay fp32
+    nb = x.shape[-1] // QBLOCK
+    xf = x.astype(jnp.float32).reshape(x.shape[:-1] + (nb, QBLOCK))
+    scale = jnp.maximum(jnp.max(jnp.abs(xf), axis=-1) / 127.0, 1e-30)
+    q = jnp.clip(jnp.rint(xf / scale[..., None]), -127, 127
+                 ).astype(jnp.int8).reshape(x.shape)
+    return QTensor(q, scale)
+
+
+def _dequantize(qt, shape) -> jax.Array:
+    if not isinstance(qt, QTensor):
+        return qt
+    nb = shape[-1] // QBLOCK
+    xf = qt.q.astype(jnp.float32).reshape(tuple(shape[:-1]) + (nb, QBLOCK))
+    return (xf * qt.scale[..., None]).reshape(shape)
+
+
+class AdamWState(NamedTuple):
+    count: jax.Array
+    m: Any
+    v: Any
+
+
+def init(params, cfg: AdamWConfig) -> AdamWState:
+    if cfg.quantized_moments:
+        zeros = jax.tree.map(lambda p: _quantize(jnp.zeros_like(p)), params)
+        return AdamWState(jnp.zeros((), jnp.int32), zeros,
+                          jax.tree.map(lambda p: _quantize(jnp.zeros_like(p)),
+                                       params))
+    z = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    return AdamWState(jnp.zeros((), jnp.int32), z,
+                      jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
+                                   params))
+
+
+def update(grads, state: AdamWState, params, cfg: AdamWConfig):
+    """Returns (new_params, new_state)."""
+    c = state.count + 1
+    b1c = 1 - cfg.b1 ** c.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** c.astype(jnp.float32)
+
+    def leaf(g, m, v, p):
+        g = g.astype(jnp.float32)
+        if cfg.quantized_moments:
+            m_f = _dequantize(m, g.shape)
+            v_f = _dequantize(v, g.shape)
+        else:
+            m_f, v_f = m, v
+        m_f = cfg.b1 * m_f + (1 - cfg.b1) * g
+        v_f = cfg.b2 * v_f + (1 - cfg.b2) * g * g
+        upd = (m_f / b1c) / (jnp.sqrt(v_f / b2c) + cfg.eps)
+        newp = p - cfg.lr * (upd + cfg.weight_decay * p)
+        if cfg.quantized_moments:
+            return newp, _quantize(m_f), _quantize(v_f)
+        return newp, m_f, v_f
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state.m)
+    flat_v = tdef.flatten_up_to(state.v)
+    out = [leaf(g, m, v, p) for g, m, v, p in
+           zip(flat_g, flat_m, flat_v, flat_p)]
+    newp = tdef.unflatten([o[0] for o in out])
+    newm = tdef.unflatten([o[1] for o in out])
+    newv = tdef.unflatten([o[2] for o in out])
+    return newp, AdamWState(c, newm, newv)

@@ -1,0 +1,1 @@
+from . import costmodel  # noqa: F401

@@ -1,0 +1,93 @@
+"""Serving engine: prefill + batched synchronized decode with optional
+cuSZ-compressed KV cache."""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.core import kvcache as KVC
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    s_max: int = 2048
+    compressed_kv: bool = False
+    temperature: float = 0.0         # 0 = greedy
+    compute_dtype: object = jnp.bfloat16
+
+
+def prefill(params, cfg: ModelConfig, tokens: jax.Array,
+            scfg: ServeConfig, extra=None):
+    """Run the prompt through the parallel forward, build decode caches.
+    Returns (last_logits [B,V], DecodeCaches, prompt_len)."""
+    logits, caches = M.forward(params, cfg, tokens, extra,
+                               compute_dtype=scfg.compute_dtype,
+                               collect_caches=True)
+    B, S = tokens.shape
+    S_total = S + cfg.n_prepend_embeds
+    entries = []
+    for kind, c in zip(cfg.pattern, caches):
+        if kind.startswith("attn"):
+            if cfg.mla:
+                ext = jnp.zeros(c.shape[:2] + (scfg.s_max - S_total,)
+                                + c.shape[3:], c.dtype)
+                entries.append(jnp.concatenate([c, ext], axis=2))
+            else:
+                k, v = c
+
+                def extend(x):
+                    ext = jnp.zeros(x.shape[:2] + (scfg.s_max - S_total,)
+                                    + x.shape[3:], x.dtype)
+                    full = jnp.concatenate([x, ext], axis=2)
+                    if scfg.compressed_kv:
+                        return KVC.kv_quantize(full, seq_axis=2)
+                    return full
+                entries.append((extend(k), extend(v)))
+        else:
+            entries.append(c)        # MambaState carries over directly
+    return logits[:, -1, :], M.DecodeCaches(tuple(entries)), S_total
+
+
+def make_serve_step(cfg: ModelConfig, scfg: ServeConfig):
+    """Jittable one-token decode for a synchronized batch."""
+
+    def step(params, token, caches, cache_len):
+        return M.decode_step(params, cfg, token, caches, cache_len,
+                             compute_dtype=scfg.compute_dtype,
+                             compressed_kv=scfg.compressed_kv)
+
+    return step
+
+
+def generate(params, cfg: ModelConfig, prompt: jax.Array, n_new: int,
+             scfg: ServeConfig, extra=None, key=None):
+    """Greedy/temperature generation for a batch of equal-length prompts.
+    Returns [B, n_new] int32."""
+    step_fn = jax.jit(make_serve_step(cfg, scfg))
+    last_logits, caches, plen = prefill(params, cfg, prompt, scfg, extra)
+    B = prompt.shape[0]
+    outs = []
+    key = key if key is not None else jax.random.PRNGKey(0)
+
+    def pick(logits, k):
+        if scfg.temperature <= 0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(k, logits / scfg.temperature
+                                      ).astype(jnp.int32)
+
+    key, k0 = jax.random.split(key)
+    tok = pick(last_logits, k0)[:, None]
+    for i in range(n_new):
+        outs.append(tok[:, 0])
+        logits, caches = step_fn(params, tok, caches,
+                                 jnp.int32(plen + i))
+        key, ki = jax.random.split(key)
+        tok = pick(logits[:, 0, :], ki)[:, None]
+    return jnp.stack(outs, axis=1)

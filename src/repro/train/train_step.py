@@ -1,0 +1,157 @@
+"""Train step: CE loss -> (microbatched) grads -> optional cuSZ-quantized
+cross-pod gradient all-reduce -> AdamW.
+
+Gradient compression layout (DESIGN.md §3): in compressed mode the batch
+keeps an explicit leading pod axis [npods, B/npods, S] sharded P('pod',
+'data', ...); per-pod grads come from `jax.vmap` over that axis, and the
+narrow-int sum over it lowers to an int8/int16 all-reduce across the
+slow inter-pod links.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gradient as G
+from repro.core import weights as W
+from repro.dist.context import (dp_axes_override, constrain_like_params,
+                                current_mesh, use_weight_compress,
+                                use_a2a_compress)
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1
+    grad_compress: str = "none"      # 'none' | 'int8' | 'int16'
+    weight_compress: str = "none"    # 'none' | 'int8' (FSDP gather path)
+    a2a_compress: str = "none"       # 'none' | 'int8' (MoE dispatch/combine)
+    npods: int = 1
+    accum_dtype: Any = jnp.float32   # bf16 for the 300B+ configs
+    adamw: adamw.AdamWConfig = adamw.AdamWConfig()
+
+
+CE_CHUNK = 1024      # sequence positions per CE chunk
+
+
+def loss_fn(params, cfg: ModelConfig, tokens, extra=None):
+    """Chunked cross-entropy: the [B,S,V] logits are never materialized —
+    each CE_CHUNK of positions projects + reduces inside a checkpointed
+    scan step (vital when the vocab doesn't divide the TP axis, e.g.
+    mamba2's 50280: replicated full logits cost 6 GiB/device on the
+    dry-run).  The vocab-dim reduction uses the lse + one-hot contraction
+    form (a vocab gather would force SPMD to replicate)."""
+    hidden, _ = M.forward(params, cfg, tokens, extra, return_hidden=True)
+    hidden = hidden[:, cfg.n_prepend_embeds:, :]
+    head = M.lm_head_of(params, cfg).astype(hidden.dtype)
+    B, S, D = hidden.shape
+    x = hidden[:, :-1, :]
+    tgt = tokens[:, 1:]
+    n = S - 1
+    nchunks = max(1, -(-n // CE_CHUNK))
+    pad = nchunks * CE_CHUNK - n
+    x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    tgt = jnp.pad(tgt, ((0, 0), (0, pad)))
+    valid = jnp.pad(jnp.ones((B, n), jnp.float32), ((0, 0), (0, pad)))
+    xc = x.reshape(B, nchunks, CE_CHUNK, D).swapaxes(0, 1)
+    tc = tgt.reshape(B, nchunks, CE_CHUNK).swapaxes(0, 1)
+    vc = valid.reshape(B, nchunks, CE_CHUNK).swapaxes(0, 1)
+
+    def chunk(acc, args):
+        xi, ti, vi = args
+        lg = jnp.einsum("bsd,dv->bsv", xi, head).astype(jnp.float32)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        onehot = jax.nn.one_hot(ti, cfg.vocab, dtype=lg.dtype)
+        tgt_logit = jnp.einsum("bsv,bsv->bs", lg, onehot)
+        return acc + jnp.sum((lse - tgt_logit) * vi), None
+
+    tot, _ = jax.lax.scan(jax.checkpoint(chunk), jnp.float32(0.0),
+                          (xc, tc, vc))
+    return tot / (B * n)
+
+
+def _microbatched_grads(params, cfg, tcfg: TrainConfig, tokens, extra):
+    """Returns (loss, grads) averaged over microbatches."""
+    nmb = tcfg.microbatches
+    if nmb == 1:
+        loss, g = jax.value_and_grad(loss_fn)(params, cfg, tokens, extra)
+        return loss, constrain_like_params(g)
+    B = tokens.shape[0]
+    assert B % nmb == 0, (B, nmb)
+    tmb = tokens.reshape(nmb, B // nmb, *tokens.shape[1:])
+    emb = jax.tree.map(lambda a: a.reshape(nmb, B // nmb, *a.shape[1:]),
+                       extra) if extra else None
+
+    def body(carry, mb):
+        acc_loss, acc_g = carry
+        tm, em = mb
+        l, g = jax.value_and_grad(loss_fn)(params, cfg, tm, em)
+        acc_g = jax.tree.map(
+            lambda a, b: a + b.astype(tcfg.accum_dtype), acc_g,
+            constrain_like_params(g))
+        return (acc_loss + l, constrain_like_params(acc_g)), None
+
+    zero_g = constrain_like_params(
+        jax.tree.map(lambda p: jnp.zeros(p.shape, tcfg.accum_dtype), params))
+    (loss, grads), _ = jax.lax.scan(body, (jnp.float32(0.0), zero_g),
+                                    (tmb, emb))
+    inv = 1.0 / nmb
+    return loss * inv, jax.tree.map(lambda g: g * inv, grads)
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
+    """Returns step(params, opt_state, tokens[, extra]) -> (loss, params,
+    opt_state).  In compressed mode tokens has shape [npods, B/npods, S]."""
+
+    def step(params, opt_state, tokens, extra=None):
+        on_mesh = current_mesh() is not None
+        if tcfg.weight_compress == "int8" and not on_mesh:
+            # single-device tests: additive-STE variant (numerics only)
+            use_params = W.compress_for_gather(params)
+        else:
+            # mesh path: the int8 gather happens inside the period scan
+            # via the weight_gather_info hook (custom_vjp STE) — the
+            # additive form would gather the fp32 master anyway
+            # (§Perf A1, refuted).
+            use_params = params
+
+        wc_ctx = use_weight_compress(tcfg.weight_compress == "int8"
+                                     and on_mesh)
+        a2a_ctx = use_a2a_compress(tcfg.a2a_compress == "int8" and on_mesh)
+
+        if tcfg.grad_compress != "none" and tcfg.npods > 1:
+            # spmd_axis_name pins every vmapped intermediate's lane dim to
+            # the 'pod' mesh axis (otherwise SPMD materializes both pods'
+            # activations on every device — found in the dry-run HLO).
+            def pod_grads(t, e):
+                with dp_axes_override(("data",)):
+                    return _microbatched_grads(use_params, cfg, tcfg, t, e)
+
+            with wc_ctx, a2a_ctx:
+                per_pod = jax.vmap(pod_grads,
+                                   in_axes=(0, 0 if extra else None),
+                                   spmd_axis_name="pod")
+                losses, grads_podded = per_pod(tokens, extra)
+            loss = jnp.mean(losses)
+            grads = G.compressed_psum_mean(grads_podded, tcfg.grad_compress,
+                                           tcfg.npods)
+        else:
+            if tokens.ndim == 3:                 # podded layout, no compress
+                tokens = tokens.reshape(-1, tokens.shape[-1])
+                if extra:
+                    extra = jax.tree.map(
+                        lambda a: a.reshape(-1, *a.shape[2:]), extra)
+            with wc_ctx, a2a_ctx:
+                loss, grads = _microbatched_grads(use_params, cfg, tcfg,
+                                                  tokens, extra)
+        new_params, new_opt = adamw.update(grads, opt_state, params,
+                                           tcfg.adamw)
+        return loss, new_params, new_opt
+
+    return step

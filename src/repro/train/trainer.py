@@ -1,0 +1,82 @@
+"""Training loop with checkpoint/restart, NaN guard, straggler watchdog.
+
+Single-controller JAX: the same loop drives 1 CPU device (tests/examples)
+or a full pod mesh (launch/train.py) — only the shardings differ.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import pipeline
+from repro.dist import fault
+from repro.io import checkpoint as ckpt_io
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+from .train_step import TrainConfig, make_train_step
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    steps: int = 100
+    batch: int = 8
+    seq: int = 128
+    seed: int = 0
+    checkpoint_every: int = 50
+    checkpoint_dir: Optional[str] = None
+    checkpoint_mode: str = "cusz"        # error-bounded restart files
+    checkpoint_eb: float = 1e-5
+    log_every: int = 10
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tcfg: TrainConfig, lcfg: LoopConfig):
+        self.cfg, self.tcfg, self.lcfg = cfg, tcfg, lcfg
+        self.step_fn = jax.jit(make_train_step(cfg, tcfg))
+        self.straggler = fault.StragglerDetector()
+        self.history: List[Dict[str, float]] = []
+
+    def init_state(self):
+        params = M.init_params(jax.random.PRNGKey(self.lcfg.seed), self.cfg)
+        opt = adamw.init(params, self.tcfg.adamw)
+        return params, opt
+
+    def run(self) -> List[Dict[str, float]]:
+        lc = self.lcfg
+        params, opt = self.init_state()
+        start = 0
+        if lc.checkpoint_dir and ckpt_io.latest_step(lc.checkpoint_dir) is not None:
+            (params, opt), start = ckpt_io.load_checkpoint(
+                lc.checkpoint_dir, (params, opt))
+            start += 1
+        last_good = None
+        for step in range(start, lc.steps):
+            toks = jnp.asarray(pipeline.host_batch(
+                self.cfg.vocab, lc.batch, lc.seq, step, lc.seed))
+            t0 = time.perf_counter()
+            loss, params, opt = self.step_fn(params, opt, toks)
+            loss.block_until_ready()
+            dt = time.perf_counter() - t0
+            slow = self.straggler.observe(step, dt)
+            if fault.loss_is_bad(loss):
+                # NaN guard: restore last good state, skip this step's data
+                if last_good is not None:
+                    params, opt = last_good
+                continue
+            self.history.append({"step": step, "loss": float(loss),
+                                 "dt": dt, "slow": bool(slow)})
+            if step % 20 == 0:
+                last_good = (params, opt)
+            if lc.checkpoint_dir and (step + 1) % lc.checkpoint_every == 0:
+                ckpt_io.save_checkpoint(lc.checkpoint_dir, step,
+                                        (params, opt),
+                                        mode=lc.checkpoint_mode,
+                                        eb_valrel=lc.checkpoint_eb)
+        return self.history

@@ -1,0 +1,103 @@
+"""End-to-end compressor tests: the paper's defining guarantee + quality."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compressor as C, metrics as M, zfp_like as Z
+from repro.data import scidata
+
+
+FIELDS = scidata.all_fields(small=True)
+
+
+class TestErrorBound:
+    @pytest.mark.parametrize("name", list(FIELDS))
+    def test_valrel_1em4_bound_held(self, name):
+        """|d − d•| ≤ eb on every synthetic SDRBench-like field at the
+        paper's headline setting valrel=1e-4 (Table 8)."""
+        f = jnp.asarray(FIELDS[name])
+        cfg = C.CompressorConfig(eb=1e-4, eb_mode="valrel")
+        recon, blob, eb, ratio = C.roundtrip(f, cfg)
+        assert int(blob.n_outliers) <= blob.out_idx.shape[0], "outlier overflow"
+        assert M.verify_error_bound(f, recon, eb), name
+        assert float(M.psnr(f, recon)) > 80.0       # paper Table 8: ~85 dB
+
+    @given(st.integers(0, 2**31 - 1),
+           st.sampled_from([1e-2, 1e-3, 1e-4]),
+           st.sampled_from([(1000,), (37, 53), (11, 13, 17)]))
+    @settings(max_examples=20, deadline=None)
+    def test_property_bound_random_fields(self, seed, valrel, shape):
+        rng = np.random.default_rng(seed)
+        kind = seed % 3
+        if kind == 0:
+            f = rng.standard_normal(shape).astype(np.float32)
+        elif kind == 1:
+            f = np.cumsum(rng.standard_normal(shape), axis=-1).astype(np.float32)
+        else:
+            f = np.zeros(shape, np.float32)            # constant field
+        cfg = C.CompressorConfig(eb=valrel, eb_mode="valrel",
+                                 outlier_frac=1.0)     # never overflow
+        recon, blob, eb, _ = C.roundtrip(jnp.asarray(f), cfg)
+        assert M.verify_error_bound(f, recon, eb)
+
+    def test_decompressed_prequant_identical(self):
+        """d° reconstruction is exact integer arithmetic: re-compressing the
+        reconstruction at the same eb is idempotent (paper §3.1.2)."""
+        f = jnp.asarray(FIELDS["cesm"])
+        cfg = C.CompressorConfig(eb=1e-3, eb_mode="abs")
+        r1, _, eb, _ = C.roundtrip(f, cfg)
+        r2, _, _, _ = C.roundtrip(r1, cfg)
+        np.testing.assert_allclose(np.asarray(r1), np.asarray(r2), atol=2.1e-3)
+
+
+class TestQuality:
+    def test_ratio_beats_zfp_like_at_equal_psnr(self):
+        """Paper Table 5 headline: cuSZ reaches ~PSNR 85 dB at a much lower
+        bitrate than the fixed-rate baseline."""
+        f = jnp.asarray(FIELDS["hurricane"])
+        cfg = C.CompressorConfig(eb=1e-4, eb_mode="valrel")
+        recon, blob, eb, ratio = C.roundtrip(f, cfg)
+        sz_psnr = float(M.psnr(f, recon))
+        sz_rate = M.bitrate(f.size, C.compressed_bytes(blob, cfg.nbins))
+        # find the baseline rate that reaches the same PSNR
+        zr = None
+        for rate in [4, 6, 8, 10, 12, 14, 16, 20]:
+            rec, br = Z.compress_decompress(f, rate)
+            if float(M.psnr(f, rec)) >= sz_psnr:
+                zr = br
+                break
+        assert zr is not None
+        assert sz_rate < zr, (sz_rate, zr)
+
+    def test_zero_concentrated_field_high_ratio(self):
+        """Table 9 fields (≈89% of points within eb of 0) compress hard."""
+        f = jnp.asarray(FIELDS["hurricane_cloud"])
+        cfg = C.CompressorConfig(eb=1e-4, eb_mode="valrel")
+        recon, blob, eb, ratio = C.roundtrip(f, cfg)
+        assert ratio > 10.0
+        assert M.verify_error_bound(f, recon, eb)
+
+    def test_tpu_blocks_do_not_break_bound(self):
+        f = jnp.asarray(FIELDS["nyx"])
+        cfg = C.CompressorConfig(eb=1e-4, eb_mode="valrel", use_tpu_blocks=True)
+        recon, blob, eb, ratio = C.roundtrip(f, cfg)
+        assert M.verify_error_bound(f, recon, eb)
+
+
+class TestAccounting:
+    def test_compressed_bytes_components(self):
+        f = jnp.asarray(FIELDS["cesm"])
+        cfg = C.CompressorConfig(eb=1e-3, eb_mode="abs", nbins=256)
+        blob, eb = C.compress(f, cfg)
+        total = C.compressed_bytes(blob, cfg.nbins)
+        bits = np.asarray(blob.bits_used, dtype=np.int64)
+        stream = int(np.sum((bits + 31) // 32) * 4)
+        assert total == stream + int(blob.n_outliers) * 8 + 256 + C.HEADER_BYTES
+
+    def test_nbins_sweep_bound_held(self):
+        f = jnp.asarray(FIELDS["hacc"])[:65536]
+        for nbins in [128, 256, 512, 1024, 4096]:
+            cfg = C.CompressorConfig(eb=1e-3, eb_mode="valrel", nbins=nbins)
+            recon, blob, eb, _ = C.roundtrip(f, cfg)
+            assert M.verify_error_bound(f, recon, eb), nbins

@@ -1,0 +1,92 @@
+"""Dual-quantization unit + property tests (paper §3.1, Algorithm 2)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dualquant as dq
+
+
+class TestLorenzo:
+    @pytest.mark.parametrize("shape,axes", [((64,), (0,)), ((16, 24), (0, 1)),
+                                            ((8, 10, 12), (0, 1, 2))])
+    def test_delta_reconstruct_inverse(self, shape, axes):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.integers(-1000, 1000, shape).astype(np.int32))
+        d = dq.lorenzo_delta(x, axes)
+        r = dq.lorenzo_reconstruct(d, axes)
+        np.testing.assert_array_equal(np.asarray(r), np.asarray(x))
+
+    def test_2d_delta_matches_paper_formula(self):
+        """δ[a,b] = d[a,b] − d[a−1,b] − d[a,b−1] + d[a−1,b−1] (paper Fig 1)."""
+        rng = np.random.default_rng(1)
+        x = rng.integers(-50, 50, (9, 11)).astype(np.int32)
+        d = np.asarray(dq.lorenzo_delta(jnp.asarray(x), (0, 1)))
+        xp = np.pad(x, ((1, 0), (1, 0)))
+        expect = xp[1:, 1:] - xp[:-1, 1:] - xp[1:, :-1] + xp[:-1, :-1]
+        np.testing.assert_array_equal(d, expect)
+
+    def test_zero_padding_layer(self):
+        """First row/col predict from the implicit zero layer (paper §3.1.1:
+        outer layer falls back to lower-order Lorenzo)."""
+        x = jnp.asarray([[5, 7], [9, 13]], dtype=jnp.int32)
+        d = np.asarray(dq.lorenzo_delta(x, (0, 1)))
+        assert d[0, 0] == 5           # predicted 0
+        assert d[0, 1] == 2           # 1D fallback: 7-5
+        assert d[1, 0] == 4           # 1D fallback: 9-5
+        assert d[1, 1] == 13 - 9 - 7 + 5
+
+
+class TestBlocking:
+    @pytest.mark.parametrize("shape,block", [((100,), (32,)), ((33, 21), (16, 16)),
+                                             ((9, 17, 11), (8, 8, 8))])
+    def test_split_merge_roundtrip(self, shape, block):
+        rng = np.random.default_rng(2)
+        x = jnp.asarray(rng.standard_normal(shape).astype(np.float32))
+        xp = dq.pad_to_blocks(x, block)
+        m = dq.block_merge(dq.block_split(xp, block), block)
+        np.testing.assert_array_equal(np.asarray(m), np.asarray(xp))
+
+    def test_blocks_are_independent(self):
+        """Changing one block must not change another block's deltas."""
+        rng = np.random.default_rng(3)
+        x = rng.standard_normal((32, 32)).astype(np.float32)
+        d1 = np.asarray(dq.blocked_delta(jnp.asarray(x), 1e-3, (16, 16)))
+        x2 = x.copy(); x2[:16, :16] += 100.0
+        d2 = np.asarray(dq.blocked_delta(jnp.asarray(x2), 1e-3, (16, 16)))
+        np.testing.assert_array_equal(d1[0, 1], d2[0, 1])
+        np.testing.assert_array_equal(d1[1, 1], d2[1, 1])
+
+
+class TestPrequant:
+    @given(st.floats(min_value=1e-4, max_value=10.0),
+           st.integers(min_value=-2**20, max_value=2**20))
+    @settings(max_examples=50, deadline=None)
+    def test_prequant_error_bounded(self, eb, seed):
+        rng = np.random.default_rng(abs(seed))
+        d = rng.uniform(-100, 100, 64).astype(np.float32)
+        dqv = dq.prequant(jnp.asarray(d), eb)
+        rec = np.asarray(dq.dequant(dqv, eb))
+        # |d − d°·2eb| ≤ eb up to fp32 representability (DESIGN.md §8)
+        slack = 4 * np.finfo(np.float32).eps * np.abs(d).max()
+        assert np.all(np.abs(d - rec) <= eb * (1 + 1e-5) + slack)
+
+
+class TestOutliers:
+    def test_extract_scatter_roundtrip(self):
+        rng = np.random.default_rng(4)
+        delta = jnp.asarray(rng.integers(-10_000, 10_000, 500).astype(np.int32))
+        codes, in_cap = dq.postquant_codes(delta, 1024)
+        idx, val, n = dq.extract_outliers(delta, in_cap, capacity=500)
+        rec = dq.codes_to_delta(codes, 1024)
+        rec = dq.scatter_outliers(rec, idx, val)
+        np.testing.assert_array_equal(np.asarray(rec), np.asarray(delta))
+        assert int(n) == int(np.sum(~np.asarray(in_cap)))
+
+    def test_code_zero_reserved_for_outlier(self):
+        delta = jnp.asarray([0, -511, 511, -512, 512, 100000], dtype=jnp.int32)
+        codes, in_cap = dq.postquant_codes(delta, 1024)
+        c = np.asarray(codes); m = np.asarray(in_cap)
+        assert m.tolist() == [True, True, True, False, False, False]
+        assert (c[~m] == 0).all() and (c[m] > 0).all()

@@ -1,0 +1,82 @@
+"""Gradient-compression and KV-cache compression tests."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import gradient as G, kvcache as KV
+
+
+class TestGradCompression:
+    @pytest.mark.parametrize("mode,tol_bits", [("int16", 16), ("int8", 8)])
+    def test_psum_mean_error_bounded(self, mode, tol_bits):
+        rng = np.random.default_rng(0)
+        npods = 2
+        g = rng.standard_normal((npods, 64, 32)).astype(np.float32) * 0.01
+        out = G.compressed_psum_mean({"w": jnp.asarray(g)}, mode, npods)["w"]
+        ref = g.mean(axis=0)
+        qmax = 2 ** (tol_bits - 1) - 1
+        scale = np.abs(g).max() / (qmax // npods)
+        # mean of per-pod quantization errors each <= scale/2
+        assert np.abs(np.asarray(out) - ref).max() <= scale / 2 + 1e-12
+
+    def test_none_mode_exact(self):
+        rng = np.random.default_rng(1)
+        g = rng.standard_normal((2, 16)).astype(np.float32)
+        out = G.compressed_psum_mean(jnp.asarray(g), "none", 2)
+        np.testing.assert_allclose(np.asarray(out), g.mean(0), rtol=1e-6)
+
+    def test_no_overflow_in_narrow_sum(self):
+        """Adversarial: all pods at +amax must not overflow the narrow sum."""
+        npods = 4
+        g = jnp.ones((npods, 128), jnp.float32) * 3.0
+        out = G.compressed_psum_mean(g, "int8", npods)
+        np.testing.assert_allclose(np.asarray(out), 3.0, rtol=0.05)
+
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=20, deadline=None)
+    def test_property_quantize_roundtrip_bound(self, seed):
+        rng = np.random.default_rng(seed)
+        g = rng.standard_normal(256).astype(np.float32) * 10 ** rng.uniform(-4, 2)
+        q, scale = G.quantize_tensor(jnp.asarray(g), "int8")
+        rec = np.asarray(G.dequantize_tensor(q, scale))
+        eb = float(G.error_bound_of(jnp.asarray(g), "int8"))
+        assert np.abs(rec - g).max() <= eb * 2 * (1 + 1e-5) + 1e-20
+
+
+class TestKVCache:
+    def test_quantize_dequantize_bound(self):
+        rng = np.random.default_rng(2)
+        k = rng.standard_normal((2, 4, 512, 16)).astype(np.float32)
+        qkv = KV.kv_quantize(jnp.asarray(k), seq_axis=2)
+        rec = np.asarray(KV.kv_dequantize(qkv, seq_axis=2, dtype=jnp.float32))
+        eb = np.asarray(KV.error_bound(qkv))
+        # per-block bound: broadcast eb over its SEQ_BLOCK
+        eb_full = np.repeat(eb, KV.SEQ_BLOCK, axis=2)
+        assert (np.abs(rec - k) <= eb_full * 2 + 1e-12).all()
+        assert qkv.q.dtype == jnp.int8
+
+    def test_update_block_preserves_old_tokens(self):
+        rng = np.random.default_rng(3)
+        cache = rng.standard_normal((1, 256, 8)).astype(np.float32) * 0.1
+        qkv = KV.kv_quantize(jnp.asarray(cache), seq_axis=1)
+        before = np.asarray(KV.kv_dequantize(qkv, 1, jnp.float32))
+        big = jnp.ones((1, 1, 8), jnp.float32) * 5.0      # widens the scale
+        qkv2 = KV.kv_update_block(qkv, big, pos=7, seq_axis=1)
+        after = np.asarray(KV.kv_dequantize(qkv2, 1, jnp.float32))
+        # written slot correct
+        np.testing.assert_allclose(after[0, 7], 5.0, atol=0.05)
+        # other tokens in the widened block survive within the new bound
+        new_eb = float(np.asarray(KV.error_bound(qkv2))[0, 0].max())
+        mask = np.ones(256, bool); mask[7] = False
+        assert np.abs(after[0, mask] - before[0, mask]).max() <= 2 * new_eb + 1e-6
+        # blocks other than block 0 untouched
+        np.testing.assert_array_equal(after[0, 128:], before[0, 128:])
+
+    def test_memory_footprint_4x(self):
+        k = jnp.zeros((2, 4, 1024, 64), jnp.bfloat16)
+        qkv = KV.kv_quantize(k.astype(jnp.float32), seq_axis=2)
+        raw = k.size * 2
+        comp = qkv.q.size * 1 + qkv.scale.size * 4
+        assert raw / comp > 1.9

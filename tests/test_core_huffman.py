@@ -1,0 +1,139 @@
+"""Huffman stage tests: losslessness, canonical properties, build parity."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import huffman as hf
+
+
+def _random_codes(rng, n, k, skew=2.0):
+    """Zipf-ish distributed symbols (like quant codes around the radius)."""
+    p = 1.0 / np.arange(1, k + 1) ** skew
+    p /= p.sum()
+    return rng.choice(k, size=n, p=p).astype(np.int32)
+
+
+class TestTreeBuild:
+    @pytest.mark.parametrize("k,n", [(16, 500), (256, 5000), (1024, 20000)])
+    def test_device_matches_host_cost(self, k, n):
+        """Two-queue device build is optimal iff its weighted codelength
+        equals the heap oracle's (optimality is unique in cost)."""
+        rng = np.random.default_rng(k)
+        codes = _random_codes(rng, n, k)
+        freq = np.bincount(codes, minlength=k).astype(np.int32)
+        lh = hf.codeword_lengths_host(freq)
+        ld = np.asarray(hf.codeword_lengths(jnp.asarray(freq)))
+        assert (freq * lh).sum() == (freq * ld).sum()
+        assert (ld[freq == 0] == 0).all() and (ld[freq > 0] > 0).all()
+
+    def test_kraft_equality(self):
+        """Optimal prefix code satisfies Kraft with equality."""
+        rng = np.random.default_rng(7)
+        freq = np.bincount(_random_codes(rng, 3000, 64), minlength=64)
+        ld = np.asarray(hf.codeword_lengths(jnp.asarray(freq.astype(np.int32))))
+        act = ld[ld > 0]
+        assert abs(np.sum(2.0 ** -act) - 1.0) < 1e-9
+
+    def test_single_symbol(self):
+        freq = jnp.zeros(32, jnp.int32).at[5].set(100)
+        ld = np.asarray(hf.codeword_lengths(freq))
+        assert ld[5] == 1 and (np.delete(ld, 5) == 0).all()
+
+    def test_two_symbols(self):
+        freq = jnp.zeros(8, jnp.int32).at[1].set(10).at[6].set(90)
+        ld = np.asarray(hf.codeword_lengths(freq))
+        assert ld[1] == 1 and ld[6] == 1
+
+
+class TestCanonical:
+    def test_prefix_free(self):
+        rng = np.random.default_rng(11)
+        freq = np.bincount(_random_codes(rng, 10000, 128), minlength=128)
+        cb = hf.canonical_codebook(hf.codeword_lengths(jnp.asarray(freq.astype(np.int32))))
+        lens = np.asarray(cb.lengths); codes = np.asarray(cb.codes)
+        act = np.nonzero(lens)[0]
+        for i in act:
+            for j in act:
+                if i == j:
+                    continue
+                li, lj = lens[i], lens[j]
+                if li <= lj and (codes[j] >> (lj - li)) == codes[i]:
+                    pytest.fail(f"code {i} is a prefix of {j}")
+
+    def test_lengths_preserved(self):
+        """Canonization keeps bitwidths => identical ratio (paper §3.2.3)."""
+        rng = np.random.default_rng(13)
+        freq = np.bincount(_random_codes(rng, 8000, 64), minlength=64)
+        ld = hf.codeword_lengths(jnp.asarray(freq.astype(np.int32)))
+        cb = hf.canonical_codebook(ld)
+        np.testing.assert_array_equal(np.asarray(cb.lengths), np.asarray(ld))
+
+    def test_packed_codebook_u32(self):
+        freq = jnp.asarray(np.bincount(_random_codes(np.random.default_rng(5), 1000, 16),
+                                       minlength=16).astype(np.int32))
+        cb = hf.canonical_codebook(hf.codeword_lengths(freq))
+        packed = np.asarray(hf.packed_codebook(cb, 32))
+        assert ((packed >> 26) == np.asarray(cb.lengths)).all()
+        assert ((packed & ((1 << 26) - 1)) == np.asarray(cb.codes)).all()
+        assert hf.select_repr(int(cb.max_len)) == 32
+
+
+class TestRoundtrip:
+    @pytest.mark.parametrize("k,n,chunk", [(64, 3000, 256), (1024, 20000, 1024),
+                                           (256, 777, 128)])
+    def test_lut_roundtrip(self, k, n, chunk):
+        rng = np.random.default_rng(n)
+        codes = _random_codes(rng, n, k)
+        freq = hf.histogram(jnp.asarray(codes), k)
+        cb = hf.canonical_codebook(hf.codeword_lengths(freq))
+        cw, bw = hf.encode(jnp.asarray(codes), cb)
+        words, bits = hf.deflate(cw, bw, chunk)
+        nc = words.shape[0]
+        n_valid = np.minimum(chunk, np.maximum(n - np.arange(nc) * chunk, 0)).astype(np.int32)
+        out = np.asarray(hf.inflate_lut(words, jnp.asarray(n_valid), cb))
+        np.testing.assert_array_equal(out.reshape(-1)[:n], codes)
+
+    def test_bitscan_roundtrip(self):
+        rng = np.random.default_rng(99)
+        codes = _random_codes(rng, 600, 32)
+        freq = hf.histogram(jnp.asarray(codes), 32)
+        cb = hf.canonical_codebook(hf.codeword_lengths(freq))
+        cw, bw = hf.encode(jnp.asarray(codes), cb)
+        words, bits = hf.deflate(cw, bw, 128)
+        nc = words.shape[0]
+        n_valid = np.minimum(128, np.maximum(600 - np.arange(nc) * 128, 0)).astype(np.int32)
+        out = np.asarray(hf.inflate_bitscan(words, bits, jnp.asarray(n_valid), cb))
+        np.testing.assert_array_equal(out.reshape(-1)[:600], codes)
+
+    @given(st.integers(0, 2**31 - 1), st.integers(2, 64),
+           st.sampled_from([64, 128, 256]))
+    @settings(max_examples=25, deadline=None)
+    def test_property_lossless(self, seed, k, chunk):
+        """Huffman stage is bit-exact lossless for arbitrary symbol streams."""
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(1, 2000))
+        codes = rng.integers(0, k, n).astype(np.int32)
+        freq = hf.histogram(jnp.asarray(codes), k)
+        cb = hf.canonical_codebook(hf.codeword_lengths(freq))
+        cw, bw = hf.encode(jnp.asarray(codes), cb)
+        words, bits = hf.deflate(cw, bw, chunk)
+        nc = words.shape[0]
+        n_valid = np.minimum(chunk, np.maximum(n - np.arange(nc) * chunk, 0)).astype(np.int32)
+        out = np.asarray(hf.inflate(words, bits, jnp.asarray(n_valid), cb,
+                                    int(cb.max_len)))
+        np.testing.assert_array_equal(out.reshape(-1)[:n], codes)
+
+    def test_deflate_bits_accounting(self):
+        """bits_used must equal the sum of encoded bitwidths per chunk."""
+        rng = np.random.default_rng(3)
+        codes = _random_codes(rng, 1000, 32)
+        freq = hf.histogram(jnp.asarray(codes), 32)
+        cb = hf.canonical_codebook(hf.codeword_lengths(freq))
+        cw, bw = hf.encode(jnp.asarray(codes), cb)
+        words, bits = hf.deflate(cw, bw, 256)
+        bwn = np.asarray(bw)
+        for c in range(words.shape[0]):
+            seg = bwn[c * 256:(c + 1) * 256]
+            assert int(bits[c]) == int(seg.sum())

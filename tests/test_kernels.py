@@ -1,0 +1,109 @@
+"""Per-kernel allclose tests: Pallas (interpret mode) vs pure-jnp oracle,
+swept over shapes/dtypes/configs."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import dualquant as dq
+from repro.kernels.lorenzo import ops as lorenzo_ops
+from repro.kernels.histogram import ops as hist_ops
+from repro.kernels.deflate import ops as deflate_ops
+from repro.core import huffman as hf
+
+
+BLOCK_CASES = [
+    # (data shape, block)
+    ((1024,), (256,)),
+    ((8192,), (4096,)),
+    ((64, 64), (16, 16)),
+    ((128, 256), (64, 128)),
+    ((16, 16, 16), (8, 8, 8)),
+    ((8, 32, 128), (8, 16, 128)),
+]
+
+
+def _blocked(shape, block, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    x = (np.cumsum(rng.standard_normal(shape), axis=-1) * scale).astype(np.float32)
+    return dq.block_split(dq.pad_to_blocks(jnp.asarray(x), block), block)
+
+
+class TestLorenzoKernel:
+    @pytest.mark.parametrize("shape,block", BLOCK_CASES)
+    @pytest.mark.parametrize("eb", [1e-2, 1e-3])
+    def test_dualquant_matches_ref(self, shape, block, eb):
+        xb = _blocked(shape, block, seed=hash((shape, block)) % 2**31)
+        ck, dk = lorenzo_ops.dualquant_blocks(xb, eb, 1024, impl="pallas")
+        cr, dr = lorenzo_ops.dualquant_blocks(xb, eb, 1024, impl="jax")
+        np.testing.assert_array_equal(np.asarray(ck), np.asarray(cr))
+        np.testing.assert_array_equal(np.asarray(dk), np.asarray(dr))
+
+    @pytest.mark.parametrize("shape,block", BLOCK_CASES)
+    def test_reverse_matches_ref(self, shape, block):
+        rng = np.random.default_rng(0)
+        nb = tuple(-(-s // b) for s, b in zip(shape, block))
+        delta = jnp.asarray(rng.integers(-500, 500, nb + block).astype(np.int32))
+        rk = lorenzo_ops.reverse_blocks(delta, 1e-3, impl="pallas")
+        rr = lorenzo_ops.reverse_blocks(delta, 1e-3, impl="jax")
+        np.testing.assert_allclose(np.asarray(rk), np.asarray(rr), rtol=0, atol=0)
+
+    @pytest.mark.parametrize("nbins", [256, 1024])
+    def test_fused_roundtrip_error_bound(self, nbins):
+        """Kernel forward + kernel reverse obeys the paper's bound."""
+        eb = 1e-3
+        xb = _blocked((64, 128), (16, 16), seed=3, scale=0.1)
+        codes, delta = lorenzo_ops.dualquant_blocks(xb, eb, nbins, impl="pallas")
+        recon = lorenzo_ops.reverse_blocks(delta, eb, impl="pallas")
+        err = np.abs(np.asarray(recon) - np.asarray(xb))
+        assert err.max() <= eb * (1 + 1e-4) + 1e-7
+
+
+class TestHistogramKernel:
+    @pytest.mark.parametrize("n,nbins", [(1000, 256), (4096, 1024),
+                                         (10000, 1024), (333, 128)])
+    def test_matches_ref(self, n, nbins):
+        rng = np.random.default_rng(n)
+        codes = jnp.asarray(rng.integers(0, nbins, n).astype(np.int32))
+        hk = hist_ops.histogram(codes, nbins, impl="pallas")
+        hr = hist_ops.histogram(codes, nbins, impl="jax")
+        np.testing.assert_array_equal(np.asarray(hk), np.asarray(hr))
+        assert int(np.asarray(hk).sum()) == n
+
+    def test_skewed_distribution(self):
+        rng = np.random.default_rng(1)
+        codes = jnp.asarray(np.clip(rng.normal(512, 3, 8192), 0, 1023).astype(np.int32))
+        hk = hist_ops.histogram(codes, 1024, impl="pallas")
+        hr = hist_ops.histogram(codes, 1024, impl="jax")
+        np.testing.assert_array_equal(np.asarray(hk), np.asarray(hr))
+
+
+class TestDeflateKernel:
+    @pytest.mark.parametrize("n,k,chunk", [(1000, 64, 512), (4096, 256, 512),
+                                           (700, 1024, 512)])
+    def test_matches_ref_bitstream(self, n, k, chunk):
+        rng = np.random.default_rng(n + k)
+        p = 1.0 / np.arange(1, k + 1) ** 1.5
+        codes = jnp.asarray(rng.choice(k, n, p=p / p.sum()).astype(np.int32))
+        cb = hf.canonical_codebook(hf.codeword_lengths(hf.histogram(codes, k)))
+        cw, bw = hf.encode(codes, cb)
+        wk, bk = deflate_ops.deflate(cw, bw, chunk, impl="pallas")
+        wr, br = deflate_ops.deflate(cw, bw, chunk, impl="jax")
+        np.testing.assert_array_equal(np.asarray(wk), np.asarray(wr))
+        np.testing.assert_array_equal(np.asarray(bk), np.asarray(br))
+
+    def test_kernel_stream_decodes(self):
+        """Kernel-produced bitstream must inflate back to the input."""
+        rng = np.random.default_rng(5)
+        n, k, chunk = 2000, 128, 512
+        codes = rng.integers(0, k, n).astype(np.int32)
+        cb = hf.canonical_codebook(hf.codeword_lengths(
+            hf.histogram(jnp.asarray(codes), k)))
+        cw, bw = hf.encode(jnp.asarray(codes), cb)
+        words, bits = deflate_ops.deflate(cw, bw, chunk, impl="pallas")
+        nc = words.shape[0]
+        n_valid = np.minimum(chunk, np.maximum(n - np.arange(nc) * chunk, 0)
+                             ).astype(np.int32)
+        out = np.asarray(hf.inflate(words, bits, jnp.asarray(n_valid), cb,
+                                    int(cb.max_len)))
+        np.testing.assert_array_equal(out.reshape(-1)[:n], codes)

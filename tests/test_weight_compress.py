@@ -1,0 +1,61 @@
+"""int8 weight-gather compression (STE) tests."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.core import weights as W
+from repro.models import model as M
+from repro.optim import adamw
+from repro.train.train_step import TrainConfig, make_train_step
+
+
+class TestWeightCompress:
+    def test_qdq_error_bounded(self):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.standard_normal((16, 256)).astype(np.float32))
+        y = W._qdq(x)
+        # blockwise bound: |x - qdq(x)| <= blockmax/127/2 per block
+        xb = np.asarray(x).reshape(16, 2, 128)
+        bound = np.abs(xb).max(-1, keepdims=True) / 127.0 / 2 * 1.01 + 1e-12
+        err = np.abs(np.asarray(y).reshape(16, 2, 128) - xb)
+        assert (err <= bound).all()
+
+    def test_ste_gradient_identity(self):
+        """d loss/d master through compress_for_gather == through identity."""
+        rng = np.random.default_rng(1)
+        p = {"w_up": jnp.asarray(rng.standard_normal((128, 128)).astype(np.float32))}
+        v = jnp.asarray(rng.standard_normal((128,)).astype(np.float32))
+
+        def loss_c(params):
+            q = W.compress_for_gather(params)
+            return jnp.sum(jnp.tanh(q["w_up"] @ v))
+
+        g = jax.grad(loss_c)(p)["w_up"]
+        # STE: gradient computed at the quantized point, identity through
+        # the quantizer — matches the analytic grad at qdq(w)
+        wq = W._qdq(p["w_up"])
+        ref = jax.grad(lambda w: jnp.sum(jnp.tanh(w @ v)))(wq)
+        np.testing.assert_allclose(np.asarray(g), np.asarray(ref), rtol=1e-6)
+
+    def test_norms_skipped(self):
+        p = {"pre_norm": jnp.ones((128,)), "w_up": jnp.ones((128, 128))}
+        q = W.compress_for_gather(p)
+        np.testing.assert_array_equal(np.asarray(q["pre_norm"]),
+                                      np.asarray(p["pre_norm"]))
+
+    def test_training_still_converges(self):
+        cfg = configs.reduced("qwen2.5-3b", n_periods=1)
+        params = M.init_params(jax.random.PRNGKey(1), cfg)
+        tcfg = TrainConfig(weight_compress="int8",
+                           adamw=adamw.AdamWConfig(lr=5e-3))
+        opt = adamw.init(params, tcfg.adamw)
+        step = jax.jit(make_train_step(cfg, tcfg))
+        rng = np.random.default_rng(2)
+        toks = jnp.asarray(rng.integers(0, 64, (8, 64)).astype(np.int32))
+        losses = []
+        for _ in range(8):
+            loss, params, opt = step(params, opt, toks)
+            losses.append(float(loss))
+        assert losses[-1] < losses[0]
+        assert all(np.isfinite(l) for l in losses)

@@ -1,0 +1,40 @@
+"""cuZFP-like baseline tests."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import zfp_like as Z, metrics as M
+from repro.data import scidata
+
+
+class TestZfpLike:
+    def test_negabinary_exact(self):
+        rng = np.random.default_rng(0)
+        i = jnp.asarray(rng.integers(-2**30, 2**30, 4096).astype(np.int32))
+        out = Z._inv_negabinary(Z._negabinary(i))
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(i))
+
+    def test_lift_near_inverse(self):
+        """ZFP's fwd/inv lifting loses only low bits (|err| small vs 2^30
+        fixed-point magnitudes)."""
+        rng = np.random.default_rng(1)
+        v = jnp.asarray(rng.integers(-2**27, 2**27, (64, 4)).astype(np.int32))
+        err = np.abs(np.asarray(Z._inv_lift(Z._fwd_lift(v, 1), 1)) -
+                     np.asarray(v))
+        assert err.max() <= 8
+
+    @pytest.mark.parametrize("name,shape", [
+        ("cesm", None), ("hurricane", None), ("nyx", None)])
+    def test_rate_monotone_psnr(self, name, shape):
+        f = jnp.asarray(scidata.all_fields(small=True)[name])
+        psnrs = []
+        for rate in (6, 10, 14):
+            rec, _ = Z.compress_decompress(f, rate)
+            psnrs.append(float(M.psnr(f, rec)))
+        assert psnrs[0] < psnrs[1] < psnrs[2]
+
+    def test_4d_field(self):
+        f = jnp.asarray(scidata.qmcpack_like((6, 24, 24, 24)))
+        rec, br = Z.compress_decompress(f, 12)
+        assert rec.shape == f.shape
+        assert float(M.psnr(f, rec)) > 40
