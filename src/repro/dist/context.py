@@ -1,0 +1,200 @@
+"""Mesh/spec context: sharding hints that are no-ops off-mesh.
+
+Model/train code calls ``constrain(...)``/``constrain_like_params(...)``
+unconditionally; whether those become
+``jax.lax.with_sharding_constraint`` or identity is decided by the
+dynamically-scoped context installed by the launcher/tests:
+
+    with use_mesh(mesh), use_param_specs(specs):
+        step = jax.jit(make_train_step(cfg, tcfg))
+        ...
+
+All managers restore the previous state on exit (including on exception),
+so contexts nest.  State is process-global by design — the single-
+controller launcher traces one program at a time; the checkpoint
+background thread never traces.
+
+Spec mini-language for ``constrain``: each element is a mesh axis name, a
+tuple of axis names, ``None`` (replicated), or the placeholder ``"dp"``
+which expands to the current data-parallel axes — ``("pod", "data")`` on
+a multi-pod mesh, overridable via ``dp_axes_override`` (the train step
+pins ``("data",)`` inside its ``vmap(..., spmd_axis_name="pod")`` region,
+where the pod dim is carried by the vmap, not the array).  Any dim whose
+size does not divide its axes falls back to replicated rather than
+erroring, mirroring ``sharding.param_specs``.
+"""
+from __future__ import annotations
+
+import math
+from contextlib import contextmanager
+from typing import Any, List, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist.sharding import dp_axes as _mesh_dp_axes
+
+_mesh_stack: List[Any] = []
+_spec_stack: List[Any] = []
+_dp_override_stack: List[Tuple[str, ...]] = []
+_weight_compress_stack: List[bool] = []
+_a2a_compress_stack: List[bool] = []
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, P)
+
+
+@contextmanager
+def _pushed(stack: List[Any], value: Any):
+    stack.append(value)
+    try:
+        yield value
+    finally:
+        stack.pop()
+
+
+# ---------------------------------------------------------------------------
+# mesh + param specs
+# ---------------------------------------------------------------------------
+
+def use_mesh(mesh):
+    """Install ``mesh`` as the current mesh for the dynamic extent."""
+    return _pushed(_mesh_stack, mesh)
+
+
+def current_mesh():
+    return _mesh_stack[-1] if _mesh_stack else None
+
+
+def use_param_specs(specs):
+    """Install the parameter PartitionSpec pytree (from
+    ``sharding.param_specs``) consulted by ``constrain_like_params`` and
+    the int8 weight-gather hook."""
+    return _pushed(_spec_stack, specs)
+
+
+def current_param_specs():
+    return _spec_stack[-1] if _spec_stack else None
+
+
+def dp_axes_override(axes: Tuple[str, ...]):
+    """Override what ``"dp"`` resolves to (inside vmapped pod regions)."""
+    return _pushed(_dp_override_stack, tuple(axes))
+
+
+def current_dp_axes() -> Optional[Tuple[str, ...]]:
+    if _dp_override_stack:
+        return _dp_override_stack[-1]
+    mesh = current_mesh()
+    return _mesh_dp_axes(mesh) if mesh is not None else None
+
+
+# ---------------------------------------------------------------------------
+# constraints
+# ---------------------------------------------------------------------------
+
+def _resolve_spec(spec_elems, shape, mesh) -> P:
+    mesh_shape = dict(mesh.shape)
+    resolved: list = []
+    for el in spec_elems:
+        if el == "dp":
+            axes = current_dp_axes() or ()
+            axes = tuple(a for a in axes if a in mesh_shape)
+            el = axes if axes else None
+        resolved.append(el)
+    for i, el in enumerate(resolved):
+        if el is None:
+            continue
+        if i >= len(shape):
+            resolved[i] = None            # over-rank element: replicate
+            continue
+        axes = tuple(a for a in (el if isinstance(el, (tuple, list))
+                                 else (el,)) if a in mesh_shape)
+        size = math.prod(int(mesh_shape[a]) for a in axes)
+        if not axes or shape[i] % size != 0:
+            resolved[i] = None            # divisibility fallback: replicate
+        else:                             # axes absent from the mesh dropped
+            resolved[i] = axes if isinstance(el, (tuple, list)) else el
+    while resolved and resolved[-1] is None:
+        resolved.pop()
+    return P(*resolved)
+
+
+def constrain(x, *spec_elems):
+    """``with_sharding_constraint`` under the current mesh; identity when
+    off-mesh.  ``spec_elems`` use the module's spec mini-language."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = _resolve_spec(spec_elems, tuple(x.shape), mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def constrain_like_params(tree, lead_axis: Optional[str] = None):
+    """Constrain a param-shaped pytree (gradients, accumulators) with the
+    installed param specs.  ``lead_axis`` prepends a mesh axis for trees
+    with one extra leading dim (the per-pod gradient stack).  No-op when
+    either the mesh or the specs are absent."""
+    mesh = current_mesh()
+    specs = current_param_specs()
+    if mesh is None or specs is None:
+        return tree
+
+    def one(leaf, spec):
+        elems = tuple(spec)
+        if lead_axis is not None:
+            elems = (lead_axis,) + elems
+        resolved = _resolve_spec(elems, tuple(leaf.shape), mesh)
+        return jax.lax.with_sharding_constraint(
+            leaf, NamedSharding(mesh, resolved))
+
+    return jax.tree_util.tree_map(one, tree, specs)
+
+
+# ---------------------------------------------------------------------------
+# compression hooks
+# ---------------------------------------------------------------------------
+
+def use_weight_compress(active: bool):
+    """Arm the int8 FSDP weight-gather hook (read via
+    ``weight_gather_info`` inside the model's period scan)."""
+    return _pushed(_weight_compress_stack, bool(active))
+
+
+def use_a2a_compress(active: bool):
+    """Arm int8 MoE dispatch/combine resharding (read via
+    ``a2a_compress_active`` inside ``moe_forward``)."""
+    return _pushed(_a2a_compress_stack, bool(active))
+
+
+def a2a_compress_active() -> bool:
+    return bool(_a2a_compress_stack and _a2a_compress_stack[-1]
+                and current_mesh() is not None)
+
+
+def _drop_lead(spec: P) -> P:
+    elems = tuple(spec)
+    return P(*elems[1:]) if elems else P()
+
+
+def weight_gather_info():
+    """When int8 weight compression is armed on-mesh with param specs
+    installed, returns ``(specs_tuple, mesh)`` where ``specs_tuple``
+    aligns with ``tuple(params["layers"])`` as seen inside the period
+    scan (leading period dim stripped from every leaf spec).  Otherwise
+    None — the model then runs the plain path."""
+    if not (_weight_compress_stack and _weight_compress_stack[-1]):
+        return None
+    mesh = current_mesh()
+    specs = current_param_specs()
+    if mesh is None or specs is None:
+        return None
+    try:
+        layer_specs = specs["layers"]
+    except (TypeError, KeyError):
+        return None
+    specs_tuple = tuple(
+        jax.tree_util.tree_map(_drop_lead, ls, is_leaf=_is_spec)
+        for ls in layer_specs)
+    return specs_tuple, mesh

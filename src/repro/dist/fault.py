@@ -1,0 +1,57 @@
+"""Fault-tolerance primitives for the training loop.
+
+Host-side (never traced): the trainer calls these between steps on
+concrete values.  ``StragglerDetector`` keeps an EMA of step wall-time
+and flags steps that exceed ``threshold``x the EMA after a warmup;
+``loss_is_bad`` is the NaN/Inf guard feeding the restore-last-good path.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+
+class StragglerDetector:
+    """Flag abnormally slow steps against an EMA baseline.
+
+    The first ``warmup`` observations only establish the baseline and are
+    never flagged.  A flagged step does not poison the baseline (its
+    duration is excluded from the EMA), so a single straggler recovers
+    immediately on the next normal step.
+    """
+
+    def __init__(self, threshold: float = 2.0, warmup: int = 5,
+                 alpha: float = 0.2):
+        assert threshold > 1.0, threshold
+        self.threshold = float(threshold)
+        self.warmup = int(warmup)
+        self.alpha = float(alpha)
+        self.ema: Optional[float] = None
+        self.n_observed = 0
+        self.n_flagged = 0
+
+    def observe(self, step: int, duration_s: float) -> bool:
+        """Record one step's wall-time; returns True iff it straggled."""
+        duration_s = float(duration_s)
+        self.n_observed += 1
+        if self.ema is None:
+            self.ema = duration_s
+            return False
+        if self.ema <= 1e-12:
+            # degenerate ~0 baseline (coarse timers): reseed instead of
+            # flagging, or every later step would flag with the EMA frozen
+            self.ema = duration_s
+            return False
+        slow = (self.n_observed > self.warmup
+                and duration_s > self.threshold * self.ema)
+        if slow:
+            self.n_flagged += 1
+        else:
+            self.ema = (1 - self.alpha) * self.ema + self.alpha * duration_s
+        return bool(slow)
+
+
+def loss_is_bad(loss) -> bool:
+    """True when the (concrete, scalar) loss is NaN/Inf."""
+    return not bool(np.isfinite(np.asarray(loss)))

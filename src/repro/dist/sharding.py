@@ -1,0 +1,132 @@
+"""Sharding rules: pytree -> PartitionSpec pytree.
+
+One rule engine covers params, optimizer moments (which mirror the param
+tree under ``AdamWState.m/.v``, including int8 ``QTensor`` leaves whose
+``q``/``scale`` inherit the parent weight's rule) and gradients.  Rules
+are keyed on the *nearest recognized trailing name* in the tree path plus
+the leaf shape, so structurally-mirrored trees get identical specs
+(``test_opt_state_specs_follow_params``).
+
+Tensor-parallel axis is ``"model"`` (attention heads / MoE experts / MLP
+ff); the divisibility fallback is per-leaf: a dim that does not divide the
+mesh axis is left replicated (granite-34b MQA: ``wk`` with kv=1 heads
+replicates while ``wq`` with 48 heads shards).  ``fsdp=True`` additionally
+shards the largest remaining dim over ``"data"`` (ZeRO-3 layout; the int8
+weight-gather in ``repro.core.weights`` keys off that ``"data"`` entry).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# tiny / numerically sensitive leaves stay replicated
+_SKIP_SUBSTR = ("norm",)
+
+# preferred model-sharded dim per trailing param name (negative indices so
+# the rule transfers to QTensor ``scale`` leaves whose last dim shrinks)
+_MODEL_DIM = {
+    # GQA/MQA attention: shard heads
+    "wq": -2, "wk": -2, "wv": -2, "bq": -2, "bk": -2, "bv": -2, "wo": -3,
+    # MLA: shard heads of the up-projections; latent projections replicate
+    "wq_b": -2, "wk_b": -2, "wv_b": -2, "wq_a": -1, "wkv_a": None,
+    # dense MLP: shard ff
+    "w_up": -1, "w_gate": -1, "w_down": -2,
+    # MoE router: shard experts
+    "router": -1,
+    # Mamba2: shard the expanded inner dim
+    "in_proj": -1, "out_proj": -2,
+    "conv_w": None, "conv_b": None, "A_log": None, "D": None,
+    "dt_bias": None,
+    # embeddings: shard vocab (sharding d_model breaks the SPMD gather
+    # partitioning inside the microbatch scan); lm_head shards vocab too
+    "embed": 0, "lm_head": -1,
+}
+# 4D (stacked) MoE expert weights shard the expert dim over 'model' (EP)
+_MOE_EXPERT_LEAVES = ("w_up", "w_gate", "w_down", "router")
+
+
+def _key_name(k) -> str:
+    return str(getattr(k, "key", getattr(k, "name", getattr(k, "idx", k))))
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, P)
+
+
+def _axis_size(mesh_shape, axis) -> int:
+    return int(mesh_shape.get(axis, 1))
+
+
+def _model_dim(names: Sequence[str], ndim: int) -> Optional[int]:
+    """Preferred 'model' dim for a leaf, or None (replicate)."""
+    if any(s in n for n in names for s in _SKIP_SUBSTR):
+        return None
+    known = next((n for n in reversed(names) if n in _MODEL_DIM), None)
+    if known is None:
+        return None
+    if known in _MOE_EXPERT_LEAVES and "moe" in names and \
+            "shared" not in names and ndim >= 4:
+        return 1                          # [nP, E, ...]: expert parallelism
+    d = _MODEL_DIM[known]
+    if d is None or not (-ndim <= d < ndim):
+        return None
+    return d % ndim
+
+
+def _leaf_spec(path, leaf, mesh_shape, fsdp: bool) -> P:
+    names = [_key_name(k) for k in path]
+    shape = tuple(leaf.shape)
+    ndim = len(shape)
+    if ndim == 0:
+        return P()
+    assign: list = [None] * ndim
+    msz = _axis_size(mesh_shape, "model")
+    md = _model_dim(names, ndim)
+    if md is not None and shape[md] % msz == 0:
+        assign[md] = "model"
+    if fsdp and not any(s in n for n in names for s in _SKIP_SUBSTR):
+        dsz = _axis_size(mesh_shape, "data")
+        in_layers = "layers" in names
+        cands = [j for j in range(ndim)
+                 if assign[j] is None and shape[j] % dsz == 0
+                 and shape[j] >= dsz and not (in_layers and j == 0)]
+        if cands and leaf.size >= 4096:
+            j = max(cands, key=lambda j: shape[j])
+            assign[j] = "data"
+    while assign and assign[-1] is None:
+        assign.pop()
+    return P(*assign)
+
+
+def param_specs(tree: Any, mesh, *, fsdp: bool = False) -> Any:
+    """PartitionSpec pytree mirroring ``tree`` (params / opt state / any
+    structurally-similar pytree of arrays or ShapeDtypeStructs)."""
+    mesh_shape = dict(mesh.shape)
+
+    def one(path, leaf):
+        return _leaf_spec(path, leaf, mesh_shape, fsdp)
+
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def param_shardings(tree: Any, mesh, *, fsdp: bool = False) -> Any:
+    """NamedSharding pytree for ``jax.device_put`` / ``in_shardings``."""
+    specs = param_specs(tree, mesh, fsdp=fsdp)
+    return jax.tree_util.tree_map(lambda sp: NamedSharding(mesh, sp), specs,
+                                  is_leaf=_is_spec)
+
+
+def dp_axes(mesh) -> Tuple[str, ...]:
+    """Mesh axes that carry data parallelism for the batch dim."""
+    return tuple(a for a in ("pod", "data") if a in dict(mesh.shape))
+
+
+def batch_spec(mesh, podded: bool = False) -> P:
+    """Global-batch PartitionSpec: [B, S] over the dp axes, or the
+    compressed-gradient layout [npods, B/npods, S]."""
+    if podded:
+        return P("pod", "data", None)
+    axes = dp_axes(mesh)
+    return P(axes if axes else None, None)

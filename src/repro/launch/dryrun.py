@@ -263,7 +263,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             microbatch_override, kv_compress, a2a_compress)
         jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
                          donate_argnums=donate)
-        pspecs = SH.param_specs(M.param_shapes(cfg), mesh)
+        # must mirror the fsdp=True placement in input_specs: the int8
+        # weight-gather keys off the 'data' axis in these specs
+        pspecs = SH.param_specs(M.param_shapes(cfg), mesh, fsdp=True)
         with use_mesh(mesh), use_param_specs(pspecs):
             lowered = jitted.lower(*args)
             t_lower = time.time() - t0

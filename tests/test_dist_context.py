@@ -1,0 +1,179 @@
+"""dist.context / dist.sharding / dist.fault unit tests: context
+nesting+restoration, spec/shape tree parity, straggler behavior."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.dist import context as ctx
+from repro.dist import fault, sharding as SH
+from repro.launch.mesh import make_host_mesh
+from repro.models import model as M
+
+
+def _is_spec(x):
+    return isinstance(x, P)
+
+
+class TestContextNesting:
+    def test_mesh_nesting_and_exception_restores(self):
+        assert ctx.current_mesh() is None
+        m1 = make_host_mesh()
+        m2 = make_host_mesh()
+        with ctx.use_mesh(m1):
+            assert ctx.current_mesh() is m1
+            with ctx.use_mesh(m2):
+                assert ctx.current_mesh() is m2
+            assert ctx.current_mesh() is m1
+            with pytest.raises(RuntimeError):
+                with ctx.use_mesh(m2):
+                    assert ctx.current_mesh() is m2
+                    raise RuntimeError("boom")
+            assert ctx.current_mesh() is m1          # restored past the raise
+        assert ctx.current_mesh() is None
+
+    def test_param_specs_and_flags_restore(self):
+        specs = {"w": P(None, "model")}
+        assert ctx.current_param_specs() is None
+        with pytest.raises(ValueError):
+            with ctx.use_param_specs(specs), ctx.use_weight_compress(True), \
+                    ctx.use_a2a_compress(True):
+                assert ctx.current_param_specs() is specs
+                raise ValueError("boom")
+        assert ctx.current_param_specs() is None
+        assert not ctx.a2a_compress_active()
+        assert ctx.weight_gather_info() is None
+
+    def test_dp_axes_override(self):
+        mesh = make_host_mesh()
+        with ctx.use_mesh(mesh):
+            assert ctx.current_dp_axes() == ("data",)
+            with ctx.dp_axes_override(("data", "model")):
+                assert ctx.current_dp_axes() == ("data", "model")
+            assert ctx.current_dp_axes() == ("data",)
+
+    def test_constrain_noop_off_mesh(self):
+        x = jnp.ones((4, 8))
+        y = ctx.constrain(x, "dp", "model")
+        assert y is x                                # identity, not a copy
+
+    def test_constrain_divisibility_fallback_on_mesh(self):
+        mesh = make_host_mesh()
+        x = jnp.ones((3, 5))                         # divides nothing
+        with ctx.use_mesh(mesh):
+            y = ctx.constrain(x, "dp", "model")
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+
+    def test_constrain_over_rank_and_unknown_axis_replicate(self):
+        mesh = make_host_mesh()                      # no 'pod' axis
+        with ctx.use_mesh(mesh):
+            x = jnp.ones((4,))
+            y = ctx.constrain(x, "dp", None, "model")   # spec rank > x rank
+            np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+            z = ctx.constrain(jnp.ones((4, 4)), "pod", ("pod", "data"))
+            assert z.shape == (4, 4)
+
+    def test_constrain_like_params_lead_axis_off_pod_mesh(self):
+        mesh = make_host_mesh()
+        tree = {"w": jnp.ones((2, 4, 4))}            # extra leading pod dim
+        with ctx.use_mesh(mesh), ctx.use_param_specs(
+                {"w": P(None, "model")}):
+            out = ctx.constrain_like_params(tree, lead_axis="pod")
+            assert out["w"].shape == (2, 4, 4)
+
+    def test_param_specs_fsdp_marks_data_axis(self):
+        """fsdp=True must put 'data' on large leaves — the int8
+        weight-gather keys off it (core.weights._has_data)."""
+        mesh = make_host_mesh()
+        cfg = configs.reduced("qwen2.5-3b", n_periods=1)
+        shapes = M.param_shapes(cfg)
+        specs = SH.param_specs(shapes, mesh, fsdp=True)
+
+        def has_data(spec):
+            return any(e == "data" or (isinstance(e, tuple) and "data" in e)
+                       for e in tuple(spec))
+
+        assert has_data(specs["layers"][0]["mlp"]["w_up"])
+        assert not has_data(specs["layers"][0]["pre_norm"])
+        plain = SH.param_specs(shapes, mesh)
+        assert not any(has_data(s) for s in
+                       jax.tree.leaves(plain, is_leaf=_is_spec))
+
+    def test_constrain_like_params_noop_without_specs(self):
+        tree = {"w": jnp.ones((4, 4))}
+        with ctx.use_mesh(make_host_mesh()):
+            assert ctx.constrain_like_params(tree) is tree
+
+
+class TestSpecShapeParity:
+    @pytest.mark.parametrize("name", sorted(configs.ARCHS))
+    def test_param_specs_tree_parity(self, name):
+        """specs must mirror param_shapes exactly: same treedef, one
+        PartitionSpec per leaf, rank(spec) <= rank(leaf)."""
+        mesh = make_host_mesh()
+        shapes = M.param_shapes(configs.get(name))
+        specs = SH.param_specs(shapes, mesh)
+        sdef = jax.tree.structure(specs, is_leaf=_is_spec)
+        pdef = jax.tree.structure(shapes)
+        assert sdef == pdef
+        for leaf, spec in zip(jax.tree.leaves(shapes),
+                              jax.tree.leaves(specs, is_leaf=_is_spec)):
+            assert isinstance(spec, P)
+            assert len(tuple(spec)) <= leaf.ndim, (spec, leaf.shape)
+
+    def test_weight_gather_info_layout(self):
+        """specs_tuple aligns with tuple(params['layers']) with the
+        leading period dim stripped from every leaf spec."""
+        mesh = make_host_mesh()
+        cfg = configs.reduced("qwen2.5-3b", n_periods=1)
+        shapes = M.param_shapes(cfg)
+        specs = SH.param_specs(shapes, mesh)
+        with ctx.use_mesh(mesh), ctx.use_param_specs(specs), \
+                ctx.use_weight_compress(True):
+            wg = ctx.weight_gather_info()
+            assert wg is not None
+            specs_tuple, m = wg
+            assert m is mesh
+            assert len(specs_tuple) == len(shapes["layers"])
+            for ls, ss in zip(shapes["layers"], specs_tuple):
+                for leaf, spec in zip(
+                        jax.tree.leaves(ls),
+                        jax.tree.leaves(ss, is_leaf=_is_spec)):
+                    assert len(tuple(spec)) <= leaf.ndim - 1
+
+    def test_batch_spec(self):
+        mesh = make_host_mesh()
+        assert SH.batch_spec(mesh) == P(("data",), None)
+        assert SH.batch_spec(mesh, podded=True) == P("pod", "data", None)
+        assert SH.dp_axes(mesh) == ("data",)
+
+
+class TestStraggler:
+    def test_warmup_never_flags(self):
+        det = fault.StragglerDetector(threshold=1.5, warmup=4)
+        # wildly varying warmup durations: still never flagged
+        assert not any(det.observe(i, d)
+                       for i, d in enumerate([0.1, 1.0, 0.05, 2.0]))
+
+    def test_threshold_boundary(self):
+        det = fault.StragglerDetector(threshold=2.0, warmup=1, alpha=0.0)
+        det.observe(0, 0.1)                          # ema frozen at 0.1
+        assert det.observe(1, 0.1) is False
+        assert det.observe(2, 0.2) is False          # == threshold: not slow
+        assert det.observe(3, 0.21) is True          # just over
+        assert det.n_flagged == 1
+
+    def test_flagged_step_excluded_from_ema(self):
+        det = fault.StragglerDetector(threshold=2.0, warmup=1, alpha=0.5)
+        det.observe(0, 0.1)
+        assert det.observe(1, 10.0) is True
+        assert det.ema == pytest.approx(0.1)         # outlier not absorbed
+        assert det.observe(2, 0.1) is False
+
+    def test_loss_is_bad(self):
+        assert fault.loss_is_bad(float("nan"))
+        assert fault.loss_is_bad(jnp.float32(-np.inf))
+        assert not fault.loss_is_bad(jnp.float32(0.0))
+        assert not fault.loss_is_bad(np.float64(1e30))
