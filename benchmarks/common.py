@@ -6,6 +6,8 @@ performance story is the dry-run roofline (benchmarks/roofline.py).
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -26,3 +28,15 @@ def timeit(fn, *args, warmup: int = 1, iters: int = 3):
 
 def emit(name: str, seconds: float, derived: str = ""):
     print(f"{name},{seconds * 1e6:.1f},{derived}")
+
+
+def write_json(path: str, records: list):
+    """Machine-readable benchmark output (one BENCH_*.json per module) so
+    perf-trajectory tooling reads structured records instead of scraping
+    the CSV stdout."""
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(records, f, indent=1)
+    print(f"# wrote {path} ({len(records)} records)")

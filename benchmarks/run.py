@@ -1,13 +1,24 @@
 """Benchmark harness entry point: one module per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV lines.
+Prints ``name,us_per_call,derived`` CSV lines; modules that support it
+also write machine-readable ``BENCH_<module>.json`` records (currently
+``throughput`` -> BENCH_throughput.json with {stage, field, impl,
+seconds, GBps}).
 
   Table 3  -> codebook            Table 4  -> huffman_repr
   Table 5/8-> quality             Table 6  -> chunksize
   Table 7  -> throughput          Figs 6-8 -> rate_distortion
   beyond   -> grad_compression    §Roofline-> roofline (from dry-run JSONs)
+
+CLI:
+  --only MOD[,MOD]   run a subset (e.g. --only throughput)
+  --small            small-size smoke path (CI: fast, still sweeps the
+                     kernel impl axis)
+  --json-dir DIR     where BENCH_*.json files land (default: cwd)
 """
 from __future__ import annotations
 
+import argparse
+import inspect
 import sys
 import traceback
 
@@ -26,12 +37,33 @@ MODULES = [
 ]
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--only", default=None,
+                   help="comma-separated module subset")
+    p.add_argument("--small", action="store_true",
+                   help="small-size smoke path (CI)")
+    p.add_argument("--json-dir", default=".",
+                   help="directory for BENCH_*.json outputs")
+    args = p.parse_args(argv)
+
+    selected = MODULES
+    if args.only:
+        names = {s.strip() for s in args.only.split(",")}
+        unknown = names - {n for n, _ in MODULES}
+        if unknown:
+            raise SystemExit(f"unknown modules: {sorted(unknown)}")
+        selected = [(n, m) for n, m in MODULES if n in names]
+
+    kwargs_all = {"small": args.small, "json_dir": args.json_dir}
     print("name,us_per_call,derived")
     failed = []
-    for name, mod in MODULES:
+    for name, mod in selected:
+        # pass only the kwargs each module's main() accepts
+        accepted = inspect.signature(mod.main).parameters
+        kwargs = {k: v for k, v in kwargs_all.items() if k in accepted}
         try:
-            mod.main()
+            mod.main(**kwargs)
         except Exception as e:                     # noqa: BLE001
             failed.append(name)
             print(f"{name}_FAILED,0.0,{type(e).__name__}:{e}")

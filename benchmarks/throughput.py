@@ -1,8 +1,27 @@
 """Paper Table 7: per-stage throughput breakdown of the full pipeline
-(predict-quant, histogram, codebook, encode, deflate; decoding: inflate,
-reversed predict-quant).  CPU numbers — relative structure mirrors the
-paper's breakdown; absolute TPU projections live in the roofline."""
+(dual-quant, histogram, codebook, encode, deflate; decoding: inflate,
+reversed dual-quant) — now swept over the kernel-dispatch IMPL AXIS:
+
+  jax               XLA reference impls (the pre-dispatch baseline)
+  pallas-interpret  Pallas kernels in interpret mode (route validation;
+                    its absolute timings are NOT a perf claim on CPU)
+  pallas            compiled Pallas kernels (added automatically when the
+                    backend is tpu/gpu)
+
+plus the fused-vs-unfused dual-quant comparison: `dualquant_unfused` is
+the old two-dispatch form (materialize the delta tree, then postquant),
+`dualquant` is the single fused kernels-op invocation the compressor now
+uses.  CPU wall-clock numbers are *relative* signals (DESIGN.md §9); the
+TPU story is the roofline.
+
+Emits CSV lines on stdout (as before) and writes BENCH_throughput.json
+records: {stage, field, impl, seconds, GBps}.
+"""
 from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -10,62 +29,143 @@ import numpy as np
 
 from repro.core import compressor as C, dualquant as dq, huffman as hf
 from repro.data import scidata
-from .common import emit, timeit
+from repro.kernels import dispatch
+from repro.kernels.deflate import ops as deflate_ops
+from repro.kernels.encode import ops as encode_ops
+from repro.kernels.histogram import ops as hist_ops
+from repro.kernels.inflate import ops as inflate_ops
+from repro.kernels.lorenzo import ops as lorenzo_ops
+from .common import emit, timeit, write_json
+
+JSON_NAME = "BENCH_throughput.json"
 
 
-def main() -> None:
-    fields = {
+def _impl_axis() -> List[str]:
+    impls = ["jax", "pallas-interpret"]
+    if jax.default_backend() in ("tpu", "gpu", "cuda", "rocm"):
+        impls.append("pallas")
+    return impls
+
+
+def _fields(small: bool) -> Dict[str, np.ndarray]:
+    if small:
+        return {
+            "hacc": scidata.hacc_like(1 << 16),
+            "cesm": scidata.cesm_like((90, 180)),
+            "hurricane": scidata.hurricane_like((10, 50, 50)),
+            "nyx": scidata.nyx_like((32, 32, 32)),
+        }
+    return {
         "hacc": scidata.hacc_like(1 << 21),
         "cesm": scidata.cesm_like((450, 900)),
         "hurricane": scidata.hurricane_like((25, 250, 250)),
         "nyx": scidata.nyx_like((96, 96, 96)),
         "qmcpack": scidata.qmcpack_like((12, 36, 36, 36)),
     }
-    for name, arr in fields.items():
-        f = jnp.asarray(arr)
-        nbytes = f.size * 4
-        cfg = C.CompressorConfig(eb=1e-4, eb_mode="valrel")
-        eb = C.resolve_eb(cfg, f)
-        block = cfg.block_for(f.ndim)
 
-        dquant = jax.jit(lambda x: dq.blocked_delta(x, eb, block))
-        t = timeit(dquant, f)
-        emit(f"T7_{name}_dualquant", t, f"GBps={nbytes / t / 1e9:.3f}")
-        delta = dquant(f)
-        codes, _ = dq.postquant_codes(delta, cfg.nbins)
 
-        t = timeit(jax.jit(lambda c: hf.histogram(c, cfg.nbins)), codes)
-        emit(f"T7_{name}_histogram", t, f"GBps={nbytes / t / 1e9:.3f}")
-        hist = hf.histogram(codes, cfg.nbins)
+def _bench_field(name: str, arr: np.ndarray, cfg: C.CompressorConfig,
+                 impls: List[str], records: list) -> None:
+    f = jnp.asarray(arr)
+    nbytes = f.size * 4
+    eb = C.resolve_eb(cfg, f)
+    block = cfg.block_for(f.ndim)
+    xb = dq.block_split(dq.pad_to_blocks(f, block), block)
 
-        build = jax.jit(lambda h: hf.canonical_codebook(
-            hf.codeword_lengths(h)).codes)
-        t = timeit(build, hist)
-        emit(f"T7_{name}_codebook", t, f"ms={t * 1e3:.2f}")
-        cb = hf.canonical_codebook(hf.codeword_lengths(hist))
+    def rec(stage, impl, t, gbps=None):
+        tag = f"T7_{name}_{stage}" + ("" if impl == "jax" else f"_{impl}")
+        derived = (f"GBps={gbps:.3f}" if gbps is not None
+                   else f"ms={t * 1e3:.2f}")
+        emit(tag, t, derived)
+        records.append({"stage": stage, "field": name, "impl": impl,
+                        "seconds": t,
+                        "GBps": gbps if gbps is not None else 0.0})
 
-        enc = jax.jit(lambda c: hf.encode(c, cb))
-        t = timeit(enc, codes)
-        emit(f"T7_{name}_encode", t, f"GBps={nbytes / t / 1e9:.3f}")
-        cw, bw = enc(codes)
+    # unfused baseline (jax only — it IS the old reference path): two
+    # dispatches with the delta tree materialized in between
+    pre = jax.jit(lambda x: dq.blocked_delta(x, eb, block))
+    post = jax.jit(lambda d: dq.postquant_codes(d, cfg.nbins)[0])
 
-        defl = jax.jit(lambda c, b: hf.deflate(c, b, cfg.chunk_size))
-        t = timeit(defl, cw, bw)
-        emit(f"T7_{name}_deflate", t, f"GBps={nbytes / t / 1e9:.3f}")
+    def unfused(x):
+        return post(pre(x))
 
-        comp = jax.jit(lambda x: C._compress_impl(x, cfg, eb).words)
-        t_comp = timeit(comp, f)
-        emit(f"T7_{name}_compress_total", t_comp,
-             f"GBps={nbytes / t_comp / 1e9:.3f}")
+    t = timeit(unfused, f)
+    rec("dualquant_unfused", "jax", t, nbytes / t / 1e9)
 
-        blob, _ = C.compress(f, cfg)
-        ml = max(1, int(blob.max_len))
-        dec = jax.jit(lambda b: C._decompress_impl(b, cfg, eb,
-                                                   tuple(f.shape), ml))
-        t_dec = timeit(dec, blob)
-        emit(f"T7_{name}_decompress_total", t_dec,
-             f"GBps={nbytes / t_dec / 1e9:.3f}")
+    # shared stage inputs (reference impls, policy-independent values)
+    codes, delta = lorenzo_ops.dualquant_blocks(xb, eb, cfg.nbins, impl="jax")
+    hist = hist_ops.histogram(codes, cfg.nbins, impl="jax")
+    cb = hf.canonical_codebook(hf.codeword_lengths(hist))
+    cw, bw = encode_ops.encode(codes, cb, impl="jax")
+
+    t = timeit(jax.jit(lambda h: hf.canonical_codebook(
+        hf.codeword_lengths(h)).codes), hist)
+    rec("codebook", "jax", t)
+
+    # blob values are impl-independent (parity is bit-exact); build once
+    blob, _ = C.compress(f, dataclasses.replace(cfg, kernel_impl="jax"))
+    ml = max(1, int(blob.max_len))
+
+    # inflate has no Pallas form (RAW-bound; dispatch resolves any pallas
+    # request to the reference), so it gets ONE row under its real impl
+    # instead of identical re-timings mislabeled per axis value
+    t = timeit(lambda w, bu, nv: inflate_ops.inflate(
+        w, bu, nv, cb, ml, impl="jax"),
+        blob.words, blob.bits_used, blob.n_valid)
+    rec("inflate", "jax", t, nbytes / t / 1e9)
+
+    nb = tuple(p // b for p, b in
+               zip(dq.padded_shape(f.shape, block), block))
+    dblk = jnp.zeros(nb + tuple(block), jnp.int32)
+
+    for impl in impls:
+        t = timeit(lambda x: lorenzo_ops.dualquant_blocks(
+            x, eb, cfg.nbins, impl=impl), xb)
+        rec("dualquant", impl, t, nbytes / t / 1e9)
+
+        t = timeit(lambda c: hist_ops.histogram(c, cfg.nbins, impl=impl),
+                   codes)
+        rec("histogram", impl, t, nbytes / t / 1e9)
+
+        t = timeit(lambda c: encode_ops.encode(c, cb, impl=impl), codes)
+        rec("encode", impl, t, nbytes / t / 1e9)
+
+        t = timeit(lambda c, b: deflate_ops.deflate(
+            c, b, cfg.chunk_size, impl=impl), cw, bw)
+        rec("deflate", impl, t, nbytes / t / 1e9)
+
+        t = timeit(lambda d: lorenzo_ops.reverse_blocks(d, eb, impl=impl),
+                   dblk)
+        rec("reverse", impl, t, nbytes / t / 1e9)
+
+        icfg = dataclasses.replace(cfg, kernel_impl=impl)
+        pp = dispatch.pipeline_policy(impl)
+        t = timeit(lambda x: C._compress_impl(x, icfg, eb, pp).words, f)
+        rec("compress_total", impl, t, nbytes / t / 1e9)
+
+        dec = jax.jit(lambda b: C._decompress_impl(
+            b, icfg, eb, tuple(f.shape), ml, pp))
+        t = timeit(dec, blob)
+        rec("decompress_total", impl, t, nbytes / t / 1e9)
+
+
+def main(small: bool = False, json_dir: str = ".",
+         impls: Optional[List[str]] = None) -> list:
+    impls = impls or _impl_axis()
+    records: list = []
+    cfg = C.CompressorConfig(eb=1e-4, eb_mode="valrel",
+                             chunk_size=512 if small else 4096)
+    for name, arr in _fields(small).items():
+        _bench_field(name, arr, cfg, impls, records)
+    write_json(os.path.join(json_dir, JSON_NAME), records)
+    return records
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    p = argparse.ArgumentParser()
+    p.add_argument("--small", action="store_true")
+    p.add_argument("--json-dir", default=".")
+    args = p.parse_args()
+    main(small=args.small, json_dir=args.json_dir)

@@ -133,6 +133,13 @@ def blocked_delta(x: jax.Array, eb: float, block: Sequence[int]) -> jax.Array:
     """pad → PREQUANT → block → Lorenzo delta on in-block axes.
 
     Returns int32 deltas shaped [nb..., b...].
+
+    NOTE: the compressor hot path no longer calls this two-stage form —
+    it routes through `kernels.lorenzo.ops.dualquant_blocks`, the fused
+    PREQUANT+delta+POSTQUANT op (one blocked kernel invocation, no
+    standalone delta tree between stage dispatches).  This form remains
+    the building block of the reference oracle and the unfused baseline
+    in `benchmarks/throughput.py`.
     """
     n = x.ndim
     xb = block_split(pad_to_blocks(x, block), block)

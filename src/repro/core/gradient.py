@@ -62,6 +62,33 @@ def compressed_psum_mean(grads_podded: Any, mode: str, npods: int) -> Any:
     return jax.tree.map(one, grads_podded)
 
 
+# ---------------------------------------------------------------------------
+# Full-pipeline cuSZ gradient blobs (cross-pod WAN link / gradient
+# accumulation offload).  The int8 psum path above stays the in-step
+# collective; these produce a storable error-bounded blob at an explicit
+# bound.  Kernel dispatch policy flows through `cfg.kernel_impl`.
+# ---------------------------------------------------------------------------
+
+def cusz_compress_gradient(g: jax.Array, cfg) -> Tuple[dict, float]:
+    """Run one gradient tensor through the full cuSZ pipeline.
+
+    cfg: a `compressor.CompressorConfig` (carries eb, nbins, chunking AND
+    the kernel dispatch policy).  Returns (packed host blob, resolved eb);
+    decompression needs the same cfg parameters.
+    """
+    from repro.core import compressor as CZ
+
+    blob, eb = CZ.compress(g, cfg)
+    return CZ.pack_blob(blob), eb
+
+
+def cusz_decompress_gradient(packed: dict, eb: float, shape, cfg) -> jax.Array:
+    """Inverse of `cusz_compress_gradient` (same cfg on both sides)."""
+    from repro.core import compressor as CZ
+
+    return CZ.decompress(CZ.unpack_blob(packed), cfg, eb, tuple(shape))
+
+
 def quantize_tensor(g: jax.Array, mode: str) -> Tuple[jax.Array, jax.Array]:
     """Standalone PREQUANT of one tensor (used by tests & the checkpoint
     codec fast path).  Returns (q, scale)."""

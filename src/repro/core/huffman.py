@@ -19,8 +19,13 @@ TPU adaptations (DESIGN.md §2):
     scatter-add (add ≡ OR on disjoint bits).  Chunked exactly like the
     paper so that inflate retains coarse-grained chunk parallelism.
   * inflate: per-chunk sequential decode (the paper is explicit this stage
-    is RAW-bound), vmapped over chunks; an O(symbols) LUT decoder is used
-    when max codeword length ≤ LUT_BITS, else an O(bits) scan.
+    is RAW-bound), vmapped over chunks; the O(symbols) LUT decoder is the
+    default whenever max codeword length ≤ LUT_BITS, else an O(bits) scan.
+
+This module holds the reference algorithms; the pipeline's hot stages
+(histogram / encode / deflate / inflate) are *dispatched* through
+`repro.kernels.*.ops`, which select between these forms and the Pallas
+kernels per backend (see kernels/dispatch.py).
 """
 from __future__ import annotations
 

@@ -72,6 +72,34 @@ def kv_update_block(qkv: QuantKV, new: jax.Array, pos, seq_axis: int) -> QuantKV
     return QuantKV(q, scale)
 
 
+# ---------------------------------------------------------------------------
+# cuSZ offload codec: evicted / resharded cache blocks go through the full
+# dual-quant + Huffman pipeline (host offload, prefill->decode reshard).
+# The int8 path above is the in-memory format; this is the wire/disk one.
+# Kernel dispatch policy flows through `cfg.kernel_impl`.
+# ---------------------------------------------------------------------------
+
+def kv_offload_pack(x: jax.Array, cfg) -> Tuple[dict, float]:
+    """Compress a cache block (f32/bf16 tensor) into a packed host blob.
+
+    cfg: a `compressor.CompressorConfig`; returns (packed blob, resolved
+    eb).  Restore with `kv_offload_restore` under the same cfg.
+    """
+    from repro.core import compressor as CZ
+
+    blob, eb = CZ.compress(jnp.asarray(x, jnp.float32), cfg)
+    return CZ.pack_blob(blob), eb
+
+
+def kv_offload_restore(packed: dict, eb: float, shape, cfg,
+                       dtype=jnp.bfloat16) -> jax.Array:
+    """Inverse of `kv_offload_pack`; returns the block in `dtype`."""
+    from repro.core import compressor as CZ
+
+    out = CZ.decompress(CZ.unpack_blob(packed), cfg, eb, tuple(shape))
+    return out.astype(dtype)
+
+
 def error_bound(qkv: QuantKV) -> jax.Array:
     """Per-block abs error bound = scale/2 (the paper's eb semantics)."""
     return qkv.scale / 2.0

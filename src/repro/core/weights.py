@@ -139,6 +139,21 @@ def gather_dequant_tree(params: Any, specs: Any, mesh) -> Any:
     return jax.tree_util.tree_map_with_path(one, params, specs)
 
 
+def checkpoint_codec_config(eb_valrel: float = 1e-5,
+                            kernel_impl=None, chunk_size: int = 4096):
+    """The weight-checkpoint cuSZ config (value-range-relative bound,
+    lane-aligned TPU blocks).  `io/checkpoint` delegates here so the
+    weight-codec policy — including the kernel dispatch choice — lives
+    with the weight-compression module; consumers thread `kernel_impl`
+    through `CompressorConfig` rather than hardcoding an impl.
+    """
+    from repro.core import compressor as CZ
+
+    return CZ.CompressorConfig(eb=eb_valrel, eb_mode="valrel",
+                               chunk_size=chunk_size, use_tpu_blocks=True,
+                               kernel_impl=kernel_impl)
+
+
 def max_weight_error(params: Any) -> float:
     """Worst relative (blockmax-relative) quantization error across
     leaves: = 1/(2·127) by construction; measured for tests."""

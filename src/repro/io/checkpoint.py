@@ -15,6 +15,7 @@ blocked.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import shutil
@@ -25,6 +26,7 @@ import jax
 import numpy as np
 
 from repro.core import compressor as CZ
+from repro.core import weights as WZ
 
 CUSZ_MIN_SIZE = 4096
 _SEP = "::"
@@ -40,11 +42,14 @@ def _flatten(tree) -> Dict[str, np.ndarray]:
 
 
 def save_checkpoint(ckpt_dir: str, step: int, tree, mode: str = "lossless",
-                    eb_valrel: float = 1e-5, background: bool = False):
+                    eb_valrel: float = 1e-5, background: bool = False,
+                    kernel_impl: Optional[str] = None):
+    """`kernel_impl` selects the compressor's kernel dispatch policy
+    (None = ambient/auto); it flows through `CompressorConfig`."""
     if background:
         t = threading.Thread(target=save_checkpoint,
                              args=(ckpt_dir, step, tree, mode, eb_valrel,
-                                   False), daemon=True)
+                                   False, kernel_impl), daemon=True)
         t.start()
         return t
     flat = _flatten(tree)
@@ -59,8 +64,8 @@ def save_checkpoint(ckpt_dir: str, step: int, tree, mode: str = "lossless",
         if (mode == "cusz" and arr.dtype == np.float32
                 and arr.size >= CUSZ_MIN_SIZE and np.all(np.isfinite(arr))
                 and float(np.max(arr) - np.min(arr)) > 0):
-            cfg = CZ.CompressorConfig(eb=eb_valrel, eb_mode="valrel",
-                                      use_tpu_blocks=True)
+            cfg = WZ.checkpoint_codec_config(eb_valrel,
+                                             kernel_impl=kernel_impl)
             blob, eb = CZ.compress(arr, cfg)
             packed = CZ.pack_blob(blob)
             # fall back to raw when the codec doesn't win (entropy-dense
@@ -95,10 +100,11 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
 
 
 def load_checkpoint(ckpt_dir: str, template, step: Optional[int] = None,
-                    shardings=None):
+                    shardings=None, kernel_impl: Optional[str] = None):
     """template: pytree with the target treedef (e.g. fresh init or
     eval_shape).  shardings: optional matching pytree of NamedSharding for
-    elastic placement on the current mesh."""
+    elastic placement on the current mesh.  kernel_impl: dispatch policy
+    for the decode path (None = ambient/auto)."""
     if step is None:
         step = latest_step(ckpt_dir)
         assert step is not None, f"no checkpoints under {ckpt_dir}"
@@ -113,9 +119,11 @@ def load_checkpoint(ckpt_dir: str, template, step: Optional[int] = None,
             packed = {k[len(prefix):]: arrays[k] for k in arrays.files
                       if k.startswith(prefix)}
             blob = CZ.unpack_blob(packed)
-            cfg = CZ.CompressorConfig(eb=1.0, eb_mode="abs",
-                                      use_tpu_blocks=True,
-                                      chunk_size=entry.get("chunk_size", 4096))
+            cfg = dataclasses.replace(
+                WZ.checkpoint_codec_config(
+                    kernel_impl=kernel_impl,
+                    chunk_size=entry.get("chunk_size", 4096)),
+                eb=1.0, eb_mode="abs")
             out = CZ.decompress(blob, cfg, entry["eb"],
                                 tuple(entry["shape"]))
             return np.asarray(jax.device_get(out))

@@ -1,3 +1,8 @@
 """Pallas TPU kernels for cuSZ hot spots, each with ops.py (jit wrapper,
-impl switch) and ref.py (pure-jnp oracle validated by tests)."""
-from . import lorenzo, histogram, deflate  # noqa: F401
+dispatch-registered impl switch) and ref.py (pure-jnp oracle validated by
+tests).  `dispatch` is the policy layer: it decides per backend — with a
+process-level override for benchmarking/CI — whether a stage runs the
+compiled Pallas kernel, the interpret-mode kernel, or the XLA reference.
+"""
+from . import dispatch  # noqa: F401  (import first: ops modules register)
+from . import lorenzo, histogram, deflate, encode, inflate  # noqa: F401

@@ -1,16 +1,25 @@
-"""Jit'd public wrapper for the deflate kernel."""
+"""Jit'd public wrapper for the deflate kernel; dispatch-registered."""
 from __future__ import annotations
 
 from functools import partial
+from typing import Optional
 
 import jax
 
+from .. import dispatch
 from . import kernel, ref
+
+KERNEL = dispatch.register("deflate", impls=("jax", "pallas"))
 
 
 @partial(jax.jit, static_argnames=("chunk_size", "impl", "interpret"))
-def deflate(cw, bw, chunk_size: int = 512, impl: str = "jax",
-            interpret: bool = True):
+def _deflate_jit(cw, bw, chunk_size: int, impl: str, interpret: bool):
     if impl == "pallas":
         return kernel.deflate_pallas(cw, bw, chunk_size, interpret=interpret)
     return ref.deflate_ref(cw, bw, chunk_size)
+
+
+def deflate(cw, bw, chunk_size: int = 512, impl: Optional[str] = None,
+            interpret: Optional[bool] = None):
+    r = dispatch.resolve(KERNEL, impl, interpret)
+    return _deflate_jit(cw, bw, chunk_size, r.impl, r.interpret)

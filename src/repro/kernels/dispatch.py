@@ -1,0 +1,237 @@
+"""Backend-aware kernel dispatch: one policy decides, per pipeline stage,
+whether the Pallas kernel or the XLA reference implementation runs.
+
+Every cuSZ hot-path stage registers here (`register`) with the impls it
+supports; callers resolve a concrete `(impl, interpret)` pair *outside*
+any jit trace so the choice is part of the jit cache key, never a stale
+thread-local baked into a compiled function.
+
+Policy values:
+  "auto"             compiled Pallas on tpu/gpu backends, XLA reference
+                     on cpu (the safe production default)
+  "jax"              force the XLA reference impl everywhere
+  "pallas"           force the Pallas kernel (interpret mode on cpu,
+                     where the TPU lowering is unavailable)
+  "pallas-interpret" force the Pallas kernel in interpret mode on any
+                     backend (CI / parity validation)
+
+Resolution order (most specific wins):
+  1. explicit per-call ``impl=`` argument (the ops-layer escape hatch —
+     benchmarks use it for the impl axis, so the overrides below never
+     silently flip a measurement that names its impl)
+  2. an active ``KernelPolicy`` context (``kernel_policy(...)``)
+  3. the ``REPRO_KERNEL_IMPL`` environment variable (process-level
+     override for benchmarking and CI)
+  4. the caller's configured default (``CompressorConfig.kernel_impl``,
+     threaded through ``pipeline_policy``)
+  5. "auto"
+
+A stage registered without a Pallas impl (e.g. `inflate`, which the
+paper is explicit is RAW-bound and which we keep as the LUT/bit-scan
+reference) resolves any pallas request to its jax impl, so a forced
+policy never crashes mid-pipeline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import threading
+from contextlib import contextmanager
+from typing import Dict, Iterator, Mapping, Optional, Tuple
+
+import jax
+
+ENV_VAR = "REPRO_KERNEL_IMPL"
+IMPL_CHOICES = ("auto", "jax", "pallas", "pallas-interpret")
+# backends with a compiled Pallas lowering
+_PALLAS_BACKENDS = ("tpu", "gpu", "cuda", "rocm")
+
+
+def _validate(impl: str) -> str:
+    if impl not in IMPL_CHOICES:
+        raise ValueError(f"unknown kernel impl {impl!r}; expected one of "
+                         f"{IMPL_CHOICES}")
+    return impl
+
+
+@dataclasses.dataclass(frozen=True)
+class Resolved:
+    """A concrete dispatch decision, safe to use as a jit static arg."""
+    impl: str            # "jax" | "pallas"
+    interpret: bool      # Pallas interpret mode (cpu validation path)
+
+    def as_kwargs(self) -> dict:
+        return {"impl": self.impl, "interpret": self.interpret}
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelPolicy:
+    """Process/scope-level impl choice with optional per-kernel overrides.
+
+    `overrides` maps a kernel name ("histogram") or name prefix
+    ("lorenzo" covers "lorenzo.dualquant" and "lorenzo.reverse") to an
+    impl choice; stored as a sorted tuple so the policy stays hashable.
+    """
+    impl: str = "auto"
+    overrides: Tuple[Tuple[str, str], ...] = ()
+
+    @staticmethod
+    def make(impl: str = "auto",
+             overrides: Optional[Mapping[str, str]] = None) -> "KernelPolicy":
+        _validate(impl)
+        items = tuple(sorted((overrides or {}).items()))
+        for _, v in items:
+            _validate(v)
+        return KernelPolicy(impl, items)
+
+    def impl_for(self, kernel: str) -> str:
+        ov = dict(self.overrides)
+        if kernel in ov:
+            return ov[kernel]
+        head = kernel.split(".", 1)[0]
+        if head in ov:
+            return ov[head]
+        return self.impl
+
+
+# ---------------------------------------------------------------------------
+# Registry: kernel name -> supported impls.  Ops modules register at import.
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Tuple[str, ...]] = {}
+
+
+def register(kernel: str, impls: Tuple[str, ...] = ("jax", "pallas")) -> str:
+    for i in impls:
+        if i not in ("jax", "pallas"):
+            raise ValueError(f"registry impls must be concrete, got {i!r}")
+    _REGISTRY[kernel] = tuple(impls)
+    return kernel
+
+
+def registered() -> Dict[str, Tuple[str, ...]]:
+    return dict(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# Ambient policy: context stack (thread-local) > environment variable.
+# ---------------------------------------------------------------------------
+
+_tls = threading.local()
+
+
+def _stack() -> list:
+    st = getattr(_tls, "stack", None)
+    if st is None:
+        st = _tls.stack = []
+    return st
+
+
+@contextmanager
+def use_policy(policy: KernelPolicy) -> Iterator[KernelPolicy]:
+    st = _stack()
+    st.append(policy)
+    try:
+        yield policy
+    finally:
+        st.pop()
+
+
+def kernel_policy(impl: str = "auto",
+                  overrides: Optional[Mapping[str, str]] = None):
+    """Scoped policy override::
+
+        with kernel_policy("pallas-interpret"):
+            blob, eb = compress(x, cfg)        # every stage forced
+    """
+    return use_policy(KernelPolicy.make(impl, overrides))
+
+
+def current_policy() -> Optional[KernelPolicy]:
+    """Active context policy, else the env-var policy, else None."""
+    st = _stack()
+    if st:
+        return st[-1]
+    env = os.environ.get(ENV_VAR, "").strip()
+    if env:
+        return KernelPolicy.make(_validate(env))
+    return None
+
+
+def ambient_impl(kernel: Optional[str] = None) -> Optional[str]:
+    pol = current_policy()
+    if pol is None:
+        return None
+    return pol.impl_for(kernel) if kernel is not None else pol.impl
+
+
+# ---------------------------------------------------------------------------
+# Resolution
+# ---------------------------------------------------------------------------
+
+def resolve(kernel: str, impl: Optional[str] = None,
+            interpret: Optional[bool] = None) -> Resolved:
+    """Resolve a kernel name (+ optional explicit request) to a concrete
+    (impl, interpret) pair.  Call OUTSIDE jit so the result is static."""
+    if kernel not in _REGISTRY:
+        raise KeyError(f"kernel {kernel!r} not registered; known: "
+                       f"{sorted(_REGISTRY)}")
+    supported = _REGISTRY[kernel]
+    if impl is None:
+        impl = ambient_impl(kernel) or "auto"
+    _validate(impl)
+    if impl == "pallas-interpret":
+        impl = "pallas"
+        interpret = True if interpret is None else interpret
+    backend = jax.default_backend()
+    if impl == "auto":
+        impl = ("pallas" if "pallas" in supported
+                and backend in _PALLAS_BACKENDS else "jax")
+    if impl == "pallas" and "pallas" not in supported:
+        impl = "jax"                       # documented fallback (see module doc)
+    if impl == "jax":
+        return Resolved("jax", False)
+    if interpret is None:
+        interpret = backend not in _PALLAS_BACKENDS
+    return Resolved("pallas", bool(interpret))
+
+
+# ---------------------------------------------------------------------------
+# Whole-pipeline policy: the compressor resolves every stage once, outside
+# jit, and passes the frozen result as a static argument.
+# ---------------------------------------------------------------------------
+
+PIPELINE_STAGES = ("lorenzo.dualquant", "lorenzo.reverse", "histogram",
+                   "encode", "deflate", "inflate")
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelinePolicy:
+    dualquant: Resolved
+    reverse: Resolved
+    histogram: Resolved
+    encode: Resolved
+    deflate: Resolved
+    inflate: Resolved
+
+
+def pipeline_policy(default_impl: Optional[str] = None) -> PipelinePolicy:
+    """Resolve all pipeline stages under the ambient policy, falling back
+    to `default_impl` (e.g. CompressorConfig.kernel_impl), then "auto"."""
+    if default_impl is not None:
+        _validate(default_impl)
+
+    def r(kernel: str) -> Resolved:
+        impl = ambient_impl(kernel)
+        if impl is None:
+            impl = default_impl
+        return resolve(kernel, impl)
+
+    return PipelinePolicy(
+        dualquant=r("lorenzo.dualquant"),
+        reverse=r("lorenzo.reverse"),
+        histogram=r("histogram"),
+        encode=r("encode"),
+        deflate=r("deflate"),
+        inflate=r("inflate"),
+    )

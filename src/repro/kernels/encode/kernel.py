@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: Huffman encode (codebook gather, cuSZ §3.2.4).
+
+The paper calls this stage "basically memory copy": every symbol gathers
+its (codeword, bitwidth) pair from the codebook.  TPUs have no fast
+VMEM gather with per-lane dynamic indices; the TPU-native formulation is
+the same ONE-HOT CONTRACTION as the histogram kernel, run the other way:
+a [T, K] one-hot of the tile's codes against a K iota, contracted on the
+MXU with the [K, 2] table of (codeword-bits, bitwidth).  One matmul per
+tile yields both outputs; int32 accumulation keeps full 32-bit codewords
+exact (one selected row per symbol — no sums that could overflow).
+
+Codewords are bitcast u32<->i32 across the MXU (two's-complement bit
+patterns survive addition-free selection unchanged), matching the
+bit-identical trick in the deflate kernel.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _encode_kernel(nbins, codes_ref, table_ref, out_ref):
+    codes = codes_ref[...].reshape(-1)                        # [T]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (codes.shape[0], nbins), 1)
+    onehot = (codes[:, None] == iota).astype(jnp.int32)       # [T, K]
+    out_ref[...] = jax.lax.dot_general(
+        onehot, table_ref[...],
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)                     # [T, 2]
+
+
+def encode_pallas(codes: jax.Array, cb, tile: int = 512,
+                  interpret: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """codes: int32 quant codes (any shape); cb: huffman.Codebook.
+    Returns (codewords uint32 [n], bitwidths int32 [n]) flat, matching
+    core/huffman.encode bit-for-bit."""
+    flat = codes.reshape(-1).astype(jnp.int32)
+    nbins = cb.codes.shape[0]
+    n = flat.shape[0]
+    npad = -(-n // tile) * tile - n
+    # pad with an out-of-range symbol: its one-hot row is all-zero, so the
+    # padded tail encodes to (0 bits, 0 width) and is cropped below
+    flat = jnp.pad(flat, (0, npad), constant_values=nbins)
+    nt = flat.shape[0] // tile
+    table = jnp.stack([jax.lax.bitcast_convert_type(cb.codes, jnp.int32),
+                       cb.lengths.astype(jnp.int32)], axis=1)  # [K, 2]
+    out = pl.pallas_call(
+        functools.partial(_encode_kernel, nbins),
+        grid=(nt,),
+        in_specs=[pl.BlockSpec((tile,), lambda i: (i,)),
+                  pl.BlockSpec((nbins, 2), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((tile, 2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nt * tile, 2), jnp.int32),
+        interpret=interpret,
+    )(flat, table)
+    cw = jax.lax.bitcast_convert_type(out[:n, 0], jnp.uint32)
+    bw = out[:n, 1]
+    return cw, bw

@@ -1,0 +1,25 @@
+"""Jit'd public wrapper for the encode kernel; dispatch-registered."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+
+from .. import dispatch
+from . import kernel, ref
+
+KERNEL = dispatch.register("encode", impls=("jax", "pallas"))
+
+
+@partial(jax.jit, static_argnames=("impl", "interpret"))
+def _encode_jit(codes, cb, impl: str, interpret: bool):
+    if impl == "pallas":
+        return kernel.encode_pallas(codes, cb, interpret=interpret)
+    return ref.encode_ref(codes, cb)
+
+
+def encode(codes, cb, impl: Optional[str] = None,
+           interpret: Optional[bool] = None):
+    r = dispatch.resolve(KERNEL, impl, interpret)
+    return _encode_jit(codes, cb, r.impl, r.interpret)

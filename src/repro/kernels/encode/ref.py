@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the encode kernel (= core/huffman.encode)."""
+import jax
+
+from repro.core import huffman as hf
+
+
+def encode_ref(codes: jax.Array, cb):
+    return hf.encode(codes, cb)

@@ -1,15 +1,25 @@
-"""Jit'd public wrapper for the histogram kernel."""
+"""Jit'd public wrapper for the histogram kernel; dispatch-registered."""
 from __future__ import annotations
 
 from functools import partial
+from typing import Optional
 
 import jax
 
+from .. import dispatch
 from . import kernel, ref
+
+KERNEL = dispatch.register("histogram", impls=("jax", "pallas"))
 
 
 @partial(jax.jit, static_argnames=("nbins", "impl", "interpret"))
-def histogram(codes, nbins: int, impl: str = "jax", interpret: bool = True):
+def _histogram_jit(codes, nbins: int, impl: str, interpret: bool):
     if impl == "pallas":
         return kernel.histogram_pallas(codes, nbins, interpret=interpret)
     return ref.histogram_ref(codes, nbins)
+
+
+def histogram(codes, nbins: int, impl: Optional[str] = None,
+              interpret: Optional[bool] = None):
+    r = dispatch.resolve(KERNEL, impl, interpret)
+    return _histogram_jit(codes, nbins, r.impl, r.interpret)

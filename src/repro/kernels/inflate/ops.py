@@ -1,0 +1,32 @@
+"""Jit'd public wrapper for the inflate stage; dispatch-registered.
+
+Registered jax-only: the paper is explicit that inflate is RAW-bound and
+sequential per chunk, so there is no Pallas win to chase here — a forced
+"pallas" policy resolves to this reference (see dispatch module doc).
+The LUT decode is the default whenever `max_len_static` permits.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+
+from .. import dispatch
+from . import ref
+
+KERNEL = dispatch.register("inflate", impls=("jax",))
+
+
+@partial(jax.jit, static_argnames=("max_len_static", "impl", "interpret"))
+def _inflate_jit(words, bits_used, n_valid, cb, max_len_static: int,
+                 impl: str, interpret: bool):
+    del impl, interpret          # single impl; kept for a uniform cache key
+    return ref.inflate_ref(words, bits_used, n_valid, cb, max_len_static)
+
+
+def inflate(words, bits_used, n_valid, cb, max_len_static: int,
+            impl: Optional[str] = None, interpret: Optional[bool] = None):
+    r = dispatch.resolve(KERNEL, impl, interpret)
+    return _inflate_jit(words, bits_used, n_valid, cb, max_len_static,
+                        r.impl, r.interpret)

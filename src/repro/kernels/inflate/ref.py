@@ -1,0 +1,14 @@
+"""Reference impl for the inflate stage (= core/huffman.inflate).
+
+The LUT path (max codeword length <= LUT_BITS) decodes O(symbols) per
+chunk; the bit-scan fallback is O(bits).  Both are vmapped over chunks,
+which is exactly the paper's coarse-grained inflate parallelism.
+"""
+import jax
+
+from repro.core import huffman as hf
+
+
+def inflate_ref(words: jax.Array, bits_used: jax.Array, n_valid: jax.Array,
+                cb, max_len_static: int) -> jax.Array:
+    return hf.inflate(words, bits_used, n_valid, cb, max_len_static)

@@ -1,4 +1,9 @@
-"""Jit'd public wrapper for the Lorenzo dual-quant kernel.
+"""Jit'd public wrappers for the Lorenzo dual-quant kernels, registered
+with the dispatch layer.
+
+With `impl=None` the ambient `KernelPolicy` (context > $REPRO_KERNEL_IMPL
+> auto) decides; an explicit `impl` always wins.  Resolution happens
+outside the jit boundary so the concrete choice is part of the cache key.
 
 impl='jax'    -> pure-jnp oracle (XLA; works on any backend, used in the
                  multi-pod dry-run where the TPU Pallas lowering is
@@ -9,23 +14,42 @@ impl='pallas' -> Pallas kernel (interpret=True on CPU for validation,
 from __future__ import annotations
 
 from functools import partial
+from typing import Optional
 
 import jax
 
+from .. import dispatch
 from . import kernel, ref
+
+DUALQUANT = dispatch.register("lorenzo.dualquant", impls=("jax", "pallas"))
+REVERSE = dispatch.register("lorenzo.reverse", impls=("jax", "pallas"))
 
 
 @partial(jax.jit, static_argnames=("eb", "nbins", "impl", "interpret"))
-def dualquant_blocks(xb, eb: float, nbins: int, impl: str = "jax",
-                     interpret: bool = True):
+def _dualquant_jit(xb, eb: float, nbins: int, impl: str, interpret: bool):
     if impl == "pallas":
         return kernel.dualquant_blocks_pallas(xb, eb, nbins,
                                               interpret=interpret)
     return ref.dualquant_blocks_ref(xb, eb, nbins)
 
 
+def dualquant_blocks(xb, eb: float, nbins: int, impl: Optional[str] = None,
+                     interpret: Optional[bool] = None):
+    """Fused PREQUANT + ℓ-delta + POSTQUANT on blocked input.
+    Returns (codes, delta), both int32 shaped like xb."""
+    r = dispatch.resolve(DUALQUANT, impl, interpret)
+    return _dualquant_jit(xb, eb, nbins, r.impl, r.interpret)
+
+
 @partial(jax.jit, static_argnames=("eb", "impl", "interpret"))
-def reverse_blocks(delta, eb: float, impl: str = "jax", interpret: bool = True):
+def _reverse_jit(delta, eb: float, impl: str, interpret: bool):
     if impl == "pallas":
         return kernel.reverse_blocks_pallas(delta, eb, interpret=interpret)
     return ref.reverse_blocks_ref(delta, eb)
+
+
+def reverse_blocks(delta, eb: float, impl: Optional[str] = None,
+                   interpret: Optional[bool] = None):
+    """Per-block cumsum inverse + dequant.  Returns blocked float32."""
+    r = dispatch.resolve(REVERSE, impl, interpret)
+    return _reverse_jit(delta, eb, r.impl, r.interpret)

@@ -9,6 +9,7 @@ from repro.core import dualquant as dq
 from repro.kernels.lorenzo import ops as lorenzo_ops
 from repro.kernels.histogram import ops as hist_ops
 from repro.kernels.deflate import ops as deflate_ops
+from repro.kernels.encode import ops as encode_ops
 from repro.core import huffman as hf
 
 
@@ -76,6 +77,22 @@ class TestHistogramKernel:
         hk = hist_ops.histogram(codes, 1024, impl="pallas")
         hr = hist_ops.histogram(codes, 1024, impl="jax")
         np.testing.assert_array_equal(np.asarray(hk), np.asarray(hr))
+
+
+class TestEncodeKernel:
+    @pytest.mark.parametrize("n,k", [(100, 64), (4096, 1024), (513, 256)])
+    def test_matches_ref(self, n, k):
+        """One-hot-MXU codebook gather == reference gather, bit-exact
+        (incl. full-width uint32 codewords through the int32 bitcast)."""
+        rng = np.random.default_rng(n * 7 + k)
+        p = 1.0 / np.arange(1, k + 1) ** 1.2
+        codes = jnp.asarray(rng.choice(k, n, p=p / p.sum()).astype(np.int32))
+        cb = hf.canonical_codebook(hf.codeword_lengths(hf.histogram(codes, k)))
+        ck, bk = encode_ops.encode(codes, cb, impl="pallas")
+        cr, br = encode_ops.encode(codes, cb, impl="jax")
+        np.testing.assert_array_equal(np.asarray(ck), np.asarray(cr))
+        np.testing.assert_array_equal(np.asarray(bk), np.asarray(br))
+        assert ck.dtype == jnp.uint32 and bk.dtype == jnp.int32
 
 
 class TestDeflateKernel:
