@@ -1,11 +1,13 @@
 """Paper Figs 6-8: rate-distortion curves, cuSZ (fixed valrel sweep) vs
 the cuZFP-like baseline (fixed rate sweep), on Hurricane- and Nyx-like
-fields.  Emits curve points as CSV for plotting."""
+fields — both sides through the `repro.codecs` registry.  Emits curve
+points as CSV for plotting."""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core import compressor as C, metrics as M, zfp_like as Z
+from repro import codecs
+from repro.core import metrics as M
 from repro.data import scidata
 from .common import emit
 
@@ -16,15 +18,19 @@ def main() -> None:
     for name, arr in fields.items():
         f = jnp.asarray(arr)
         for valrel in (1e-2, 1e-3, 1e-4, 1e-5):
-            cfg = C.CompressorConfig(eb=valrel, eb_mode="valrel")
-            recon, blob, eb, ratio = C.roundtrip(f, cfg)
-            rate = M.bitrate(f.size, C.compressed_bytes(blob, cfg.nbins))
+            codec = codecs.get("cusz", eb=valrel, eb_mode="valrel")
+            c = codec.encode(f)
+            recon = codecs.decode(c)
+            rate = M.bitrate(f.size, codec.stored_nbytes(c))
             emit(f"rd_cusz_{name}_valrel{valrel:g}", 0.0,
                  f"bitrate={rate:.2f};PSNR={float(M.psnr(f, recon)):.1f}")
         for r in (4, 8, 12, 16, 20):
-            rec, br = Z.compress_decompress(f, r)
+            codec = codecs.get("zfp", rate_bits=r)
+            c = codec.encode(f)
+            rec = codecs.decode(c)
             emit(f"rd_zfplike_{name}_rate{r}", 0.0,
-                 f"bitrate={br:.2f};PSNR={float(M.psnr(f, rec)):.1f}")
+                 f"bitrate={codec.achieved_bitrate(c):.2f};"
+                 f"PSNR={float(M.psnr(f, rec)):.1f}")
 
 
 if __name__ == "__main__":

@@ -1,27 +1,40 @@
 """Quickstart: error-bounded compression of a scientific field (the
-paper's core use case) in ~20 lines.
+paper's core use case) through the unified codec API in ~20 lines.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax.numpy as jnp
 
-from repro.core import compressor as C, metrics as M
+from repro import codecs
+from repro.core import metrics as M
 from repro.data import scidata
 
 # a Hurricane-Isabel-like 3D field (synthetic SDRBench stand-in)
 field = jnp.asarray(scidata.hurricane_like((25, 125, 125)))
 
-# compress at the paper's headline setting: value-range-relative 1e-4
-cfg = C.CompressorConfig(eb=1e-4, eb_mode="valrel")
-recon, blob, eb, ratio = C.roundtrip(field, cfg)
+# compress at the paper's headline setting: value-range-relative 1e-4.
+# The returned Container is self-describing: codec id, resolved abs eb,
+# dtype and shape all ride in its header.
+codec = codecs.get("cusz", eb=1e-4, eb_mode="valrel")
+container = codec.encode(field)
+recon = codecs.decode(container)          # nothing else needed
 
+eb = container.header.param("eb")
+nbytes = codec.stored_nbytes(container)
 print(f"field             : {field.shape} float32 "
       f"({field.size * 4 / 1e6:.1f} MB)")
+print(f"container         : {container}")
 print(f"error bound (abs) : {eb:.3e}")
-print(f"compression ratio : {ratio:.2f}x "
-      f"({C.compressed_bytes(blob, cfg.nbins) / 1e6:.2f} MB)")
+print(f"compression ratio : {field.nbytes / nbytes:.2f}x "
+      f"({nbytes / 1e6:.2f} MB)")
 print(f"PSNR              : {float(M.psnr(field, recon)):.1f} dB")
 print(f"max |d - d'|      : {float(M.max_abs_err(field, recon)):.3e}")
 print(f"bound held        : {M.verify_error_bound(field, recon, eb)}")
-print(f"outliers          : {int(blob.n_outliers)} "
-      f"(capacity {blob.out_idx.shape[0]})")
+
+# the same contract runs every codec in the registry
+for name in ("int8", "zfp"):
+    c = codecs.get(name).encode(field)
+    r = codecs.decode(c)
+    print(f"{name:18}: ratio "
+          f"{field.nbytes / codecs.get(name).stored_nbytes(c):5.2f}x  "
+          f"PSNR {float(M.psnr(field, r)):6.1f} dB")

@@ -13,6 +13,7 @@ import dataclasses
 import numpy as np
 
 from repro import configs
+from repro.io.checkpoint import CheckpointPolicy
 from repro.models.config import ModelConfig
 from repro.optim.adamw import AdamWConfig
 from repro.train.train_step import TrainConfig
@@ -45,7 +46,8 @@ def main():
     tcfg = TrainConfig(microbatches=1, adamw=AdamWConfig(lr=1e-3))
     lcfg = LoopConfig(steps=args.steps, batch=args.batch, seq=args.seq,
                       checkpoint_every=100, checkpoint_dir=args.ckpt_dir,
-                      checkpoint_mode="cusz", checkpoint_eb=1e-5)
+                      checkpoint_policy=CheckpointPolicy(codec="cusz",
+                                                         eb_valrel=1e-5))
     tr = Trainer(cfg, tcfg, lcfg)
     hist = tr.run()
     losses = [h["loss"] for h in hist]

@@ -1,0 +1,38 @@
+"""`repro.codecs` — one codec API for every compression surface.
+
+    from repro import codecs
+
+    c = codecs.get("cusz", eb=1e-4, eb_mode="valrel").encode(x)
+    y = codecs.decode(c)                  # the container is self-describing
+
+Registered codecs:
+
+    "cusz"        full dual-quant + canonical-Huffman pipeline (error-
+                  bounded; kernel dispatch via `kernel_impl=`)
+    "int8"        per-tensor symmetric int8 (eb = scale/2)
+    "int16"       per-tensor symmetric int16
+    "int8-block"  blockwise int8 along one axis (KV cache / FSDP weight
+                  gather / MoE all-to-all wire format)
+    "zfp"         cuZFP-like fixed-rate block transform (baseline)
+    "lossless"    identity (raw arrays; bitcast-safe for bf16 storage)
+
+Every codec produces a versioned, self-describing `Container` (payload
+pytree + static header with codec id/version/dtype/shape/params);
+`pack`/`unpack` switch between the device form and the host storage form,
+and `to_arrays`/`from_arrays` bridge to npz-style field dicts.
+"""
+from .base import (Codec, decode, get, get_block_codec,  # noqa: F401
+                   names, register)
+from .container import (CONTAINER_FORMAT, Container, Header,  # noqa: F401
+                        from_arrays, make_header, to_arrays)
+
+# importing the implementation modules populates the registry
+from . import cusz as cusz            # noqa: F401
+from . import int8 as int8            # noqa: F401
+from . import lossless as lossless    # noqa: F401
+from . import zfp as zfp              # noqa: F401
+
+__all__ = ["Codec", "Container", "Header", "CONTAINER_FORMAT",
+           "decode", "get", "get_block_codec", "names", "register",
+           "to_arrays", "from_arrays", "make_header",
+           "cusz", "int8", "lossless", "zfp"]

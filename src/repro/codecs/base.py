@@ -1,0 +1,136 @@
+"""The `Codec` protocol and the string-keyed codec registry.
+
+Every compression surface in the repo implements one contract:
+
+    encode(x, *, cfg=None)      -> Container        (device pytree + header)
+    decode(container, *, like)  -> jax.Array        (header-honoring inverse)
+    pack(container)             -> Container        (host/storage form)
+    unpack(container)           -> Container        (back to device form)
+
+`decode` needs nothing but the container — dtype, shape and every codec
+parameter ride in the header.  `like` optionally overrides the output
+dtype/shape (elastic restore).  `pack` defaults to pulling the payload to
+host numpy; codecs with a denser storage form (cuSZ's per-chunk word
+packing) override it, and `decode` transparently unpacks packed input.
+
+Registry: `get("cusz")`, `get("int8")`, `get("int8-block", axis=2)`, ...
+Construction kwargs configure the codec instance; encode/decode stay
+config-free so a codec object is a static, hashable policy.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .container import Container, Header, make_header
+
+
+class Codec:
+    """Base class: subclasses set `name`/`version`, implement encode/decode.
+
+    Instances must be cheap, immutable and hashable (frozen dataclasses):
+    they are used as static jit cache keys by consumers.
+    """
+
+    name: str = "?"
+    version: int = 1
+
+    # -- required -----------------------------------------------------------
+    def encode(self, x, *, cfg=None) -> Container:
+        raise NotImplementedError
+
+    def decode(self, c: Container, *, like=None) -> jax.Array:
+        raise NotImplementedError
+
+    # -- storage form (override when a denser packing exists) ---------------
+    def pack(self, c: Container) -> Container:
+        """Host/storage form: numpy payload, `packed=True` in the header."""
+        if c.header.param("packed"):
+            return c
+        payload = {k: np.asarray(jax.device_get(v))
+                   for k, v in c.payload.items()}
+        return Container(c.header.with_params(packed=True), payload)
+
+    def unpack(self, c: Container) -> Container:
+        """Inverse of `pack`: device arrays, `packed` flag dropped."""
+        if not c.header.param("packed"):
+            return c
+        payload = {k: jnp.asarray(v) for k, v in c.payload.items()}
+        return Container(c.header.with_params(packed=False), payload)
+
+    # -- shared helpers -----------------------------------------------------
+    def _header(self, x, **params) -> Header:
+        return make_header(self.name, self.version, x, **params)
+
+    def _finish(self, y: jax.Array, header: Header, like) -> jax.Array:
+        """Cast/reshape decode output per the header (or `like` override)."""
+        if like is not None:
+            return y.reshape(tuple(like.shape)).astype(like.dtype)
+        return y.reshape(header.shape).astype(np.dtype(header.dtype))
+
+    def stored_nbytes(self, c: Container) -> int:
+        """Bytes this container occupies in storage form."""
+        return self.pack(c).nbytes
+
+    def valid(self, c: Container) -> bool:
+        """Whether this (device-form) container decodes faithfully.
+        Codecs with capacity limits override (cuSZ: outlier overflow)."""
+        return True
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_FACTORIES: Dict[str, Callable[..., Codec]] = {}
+_DEFAULTS: Dict[str, Codec] = {}      # cache for kwarg-less lookups
+
+
+def register(name: str, factory: Callable[..., Codec]) -> None:
+    """Register a codec factory under a string key.  `factory(**kwargs)`
+    must return a configured `Codec` instance."""
+    _FACTORIES[name] = factory
+    _DEFAULTS.pop(name, None)
+
+
+def get(name: str, **kwargs) -> Codec:
+    """Look up a configured codec: `get("cusz", eb=1e-4, eb_mode="valrel")`.
+    Without kwargs the default-configured instance is cached and shared."""
+    if name not in _FACTORIES:
+        raise KeyError(f"unknown codec {name!r}; registered: {names()}")
+    if not kwargs:
+        if name not in _DEFAULTS:
+            _DEFAULTS[name] = _FACTORIES[name]()
+        return _DEFAULTS[name]
+    return _FACTORIES[name](**kwargs)
+
+
+def names() -> List[str]:
+    return sorted(_FACTORIES)
+
+
+def get_block_codec(name: str, *, axis: int, block: int) -> Codec:
+    """Look up a codec that quantizes blockwise along one axis (the wire/
+    cache format the KV cache and the a2a reshard need).  Raises a clear
+    error for registry ids that don't take axis/block configuration."""
+    try:
+        return get(name, axis=axis, block=block)
+    except TypeError:
+        raise ValueError(
+            f"codec {name!r} is not a blockwise wire codec: it must accept "
+            f"axis=/block= configuration (e.g. 'int8-block')") from None
+
+
+def decode(c: Container, *, like=None, **codec_kwargs) -> jax.Array:
+    """Decode a container by its own header — the codec id, version, dtype
+    and shape all come from the container; nothing else is required.
+    `codec_kwargs` configure the decode-side codec (e.g. kernel_impl)."""
+    codec = get(c.header.codec, **codec_kwargs)
+    if c.header.version > codec.version:
+        raise ValueError(
+            f"container written by {c.header.codec} v{c.header.version}, "
+            f"but installed codec is v{codec.version}")
+    return codec.decode(c, like=like)

@@ -1,0 +1,142 @@
+"""Self-describing versioned container: the one wire/storage format every
+codec produces and consumes.
+
+A `Container` is a pytree of payload arrays plus a static `Header` that
+records everything needed to decode — codec id, codec version, the source
+array's dtype and shape, and the codec's static parameters (error bound,
+bin count, block table, ...).  Nothing travels out-of-band: the historical
+`(packed_dict, eb, shape)` caller-side plumbing (which silently dropped
+the source dtype) is replaced by `codecs.decode(container)`.
+
+The header is the pytree aux data, so containers cross `jax.jit`
+boundaries with the header as a static cache key, and `jax.tree` utilities
+treat the payload arrays as leaves.  `to_arrays`/`from_arrays` give the
+host/storage view (npz-friendly field dict + JSON-able header).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Mapping, Tuple
+
+import jax
+import numpy as np
+
+CONTAINER_FORMAT = 1
+
+
+def _freeze(v):
+    """Make a params value hashable (lists -> tuples, recursively)."""
+    if isinstance(v, (list, tuple)):
+        return tuple(_freeze(x) for x in v)
+    if isinstance(v, (np.integer,)):
+        return int(v)
+    if isinstance(v, (np.floating,)):
+        return float(v)
+    return v
+
+
+def _jsonable(v):
+    if isinstance(v, tuple):
+        return [_jsonable(x) for x in v]
+    return v
+
+
+@dataclasses.dataclass(frozen=True)
+class Header:
+    """Static, hashable codec header (safe as a jit static argument)."""
+    codec: str                                   # registry id, e.g. "cusz"
+    version: int                                 # codec format version
+    dtype: str                                   # source dtype name
+    shape: Tuple[int, ...]                       # source shape
+    params: Tuple[Tuple[str, Any], ...] = ()     # static codec params
+
+    def param(self, key: str, default=None):
+        for k, v in self.params:
+            if k == key:
+                return v
+        return default
+
+    def with_params(self, **kw) -> "Header":
+        """Return a header with `kw` merged into params (replace on key)."""
+        items = [(k, v) for k, v in self.params if k not in kw]
+        items += [(k, _freeze(v)) for k, v in sorted(kw.items())]
+        return dataclasses.replace(self, params=tuple(items))
+
+    def to_json(self) -> Dict[str, Any]:
+        return {"format": CONTAINER_FORMAT, "codec": self.codec,
+                "version": self.version, "dtype": self.dtype,
+                "shape": list(self.shape),
+                "params": {k: _jsonable(v) for k, v in self.params}}
+
+    @staticmethod
+    def from_json(d: Mapping[str, Any]) -> "Header":
+        fmt = d.get("format", CONTAINER_FORMAT)
+        if fmt > CONTAINER_FORMAT:
+            raise ValueError(f"container format {fmt} is newer than this "
+                             f"reader ({CONTAINER_FORMAT})")
+        params = tuple(sorted((k, _freeze(v))
+                              for k, v in dict(d.get("params", {})).items()))
+        return Header(codec=str(d["codec"]), version=int(d["version"]),
+                      dtype=str(d["dtype"]), shape=tuple(d["shape"]),
+                      params=params)
+
+
+def make_header(codec: str, version: int, like, **params) -> Header:
+    """Header for a source array `like` (anything with .dtype/.shape)."""
+    items = tuple(sorted((k, _freeze(v)) for k, v in params.items()))
+    return Header(codec=codec, version=int(version),
+                  dtype=np.dtype(like.dtype).name,
+                  shape=tuple(int(s) for s in like.shape), params=items)
+
+
+@jax.tree_util.register_pytree_node_class
+class Container:
+    """header (static) + payload (dict of arrays; the pytree leaves)."""
+
+    __slots__ = ("header", "payload")
+
+    def __init__(self, header: Header, payload: Dict[str, Any]):
+        self.header = header
+        self.payload = dict(payload)
+
+    # -- pytree protocol ----------------------------------------------------
+    def tree_flatten(self):
+        keys = tuple(sorted(self.payload))
+        return tuple(self.payload[k] for k in keys), (self.header, keys)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        header, keys = aux
+        return cls(header, dict(zip(keys, children)))
+
+    # -- conveniences -------------------------------------------------------
+    @property
+    def nbytes(self) -> int:
+        return sum(np.asarray(jax.device_get(v)).nbytes
+                   for v in self.payload.values())
+
+    def replace(self, header: Header = None, payload=None) -> "Container":
+        return Container(header if header is not None else self.header,
+                         payload if payload is not None else self.payload)
+
+    def __repr__(self):
+        h = self.header
+        return (f"Container(codec={h.codec!r}, v{h.version}, "
+                f"dtype={h.dtype}, shape={h.shape}, "
+                f"fields={sorted(self.payload)})")
+
+
+# ---------------------------------------------------------------------------
+# Host / storage view
+# ---------------------------------------------------------------------------
+
+def to_arrays(c: Container) -> Tuple[Dict[str, Any], Dict[str, np.ndarray]]:
+    """(header-json, {field: numpy array}) — the npz/storage form."""
+    arrays = {k: np.asarray(jax.device_get(v)) for k, v in c.payload.items()}
+    return c.header.to_json(), arrays
+
+
+def from_arrays(header, arrays: Mapping[str, Any]) -> Container:
+    """Rebuild a container from `to_arrays` output (header json or Header)."""
+    h = header if isinstance(header, Header) else Header.from_json(header)
+    return Container(h, dict(arrays))

@@ -1,0 +1,101 @@
+"""The cuSZ pipeline (dual-quant + canonical Huffman) behind the `Codec`
+protocol.
+
+`encode` resolves the error bound (valrel -> abs) on the host, runs the
+jitted pipeline (kernel dispatch policy threaded via
+`CompressorConfig.kernel_impl` / the ambient `kernels.dispatch` policy),
+and records every decode-side parameter in the header: the resolved abs
+eb, nbins, chunk size, the resolved Lorenzo block and the outlier
+capacity fraction.  The source dtype/shape ride in the header too, so a
+bf16 tensor comes back as bf16 — the historical `(packed, eb)` +
+caller-side shape/dtype plumbing is gone.
+
+`pack` switches the payload to the per-chunk word-packed host form
+(`compressor.pack_blob`); `decode` accepts either form.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compressor as CZ
+
+from .base import Codec, register
+from .container import Container
+
+
+@dataclasses.dataclass(frozen=True)
+class CuszCodec(Codec):
+    cfg: CZ.CompressorConfig = CZ.CompressorConfig()
+    name = "cusz"
+    version = 1
+
+    @staticmethod
+    def make(cfg: Optional[CZ.CompressorConfig] = None, **kw) -> "CuszCodec":
+        if cfg is None:
+            cfg = CZ.CompressorConfig(**kw)
+        elif kw:
+            cfg = dataclasses.replace(cfg, **kw)
+        return CuszCodec(cfg=cfg)
+
+    # -- protocol -----------------------------------------------------------
+    def encode(self, x, *, cfg: Optional[CZ.CompressorConfig] = None
+               ) -> Container:
+        c = cfg if cfg is not None else self.cfg
+        x32 = jnp.asarray(x, jnp.float32) \
+            if jnp.asarray(x).dtype != jnp.float32 else jnp.asarray(x)
+        blob, eb = CZ.compress(x32, c)
+        header = self._header(
+            x, eb=float(eb), nbins=int(c.nbins), chunk_size=int(c.chunk_size),
+            block=tuple(c.block_for(x32.ndim)),
+            outlier_frac=float(c.outlier_frac))
+        return Container(header, dict(zip(CZ.CompressedBlob._fields, blob)))
+
+    def decode(self, c: Container, *, like=None) -> jax.Array:
+        c = self.unpack(c)
+        h = c.header
+        cfg = self._decode_cfg(h)
+        blob = CZ.CompressedBlob(**{f: jnp.asarray(c.payload[f])
+                                    for f in CZ.CompressedBlob._fields})
+        y = CZ.decompress(blob, cfg, float(h.param("eb")), h.shape)
+        return self._finish(y, h, like)
+
+    # -- storage form: per-chunk word packing -------------------------------
+    def pack(self, c: Container) -> Container:
+        if c.header.param("packed"):
+            return c
+        blob = CZ.CompressedBlob(**{f: c.payload[f]
+                                    for f in CZ.CompressedBlob._fields})
+        return Container(c.header.with_params(packed=True),
+                         CZ.pack_blob(blob))
+
+    def unpack(self, c: Container) -> Container:
+        if not c.header.param("packed"):
+            return c
+        blob = CZ.unpack_blob(dict(c.payload))
+        return Container(c.header.with_params(packed=False),
+                         dict(zip(CZ.CompressedBlob._fields, blob)))
+
+    def valid(self, c: Container) -> bool:
+        """False when the sparse outlier store overflowed its capacity
+        (the blob would decode lossily beyond the bound)."""
+        if c.header.param("packed"):
+            return True                       # pack() is post-validation
+        n_out = int(jax.device_get(c.payload["n_outliers"]))
+        return n_out <= int(c.payload["out_idx"].shape[0])
+
+    # -- helpers ------------------------------------------------------------
+    def _decode_cfg(self, h) -> CZ.CompressorConfig:
+        return CZ.CompressorConfig(
+            eb=float(h.param("eb")), eb_mode="abs",
+            nbins=int(h.param("nbins")),
+            chunk_size=int(h.param("chunk_size")),
+            block=tuple(h.param("block")),
+            outlier_frac=float(h.param("outlier_frac")),
+            kernel_impl=self.cfg.kernel_impl)
+
+
+register("cusz", CuszCodec.make)

@@ -1,0 +1,149 @@
+"""Narrow-integer PREQUANT codecs (the paper's d° = round(d/(2·eb)) with
+scale-derived bounds) — the canonical home of the int8/int16 quantization
+math every integer surface shares:
+
+  * `Int8Codec` ("int8" / "int16"): one scale per tensor.  The gradient
+    pod-compression path (`core.gradient`) and per-tensor checkpoint
+    leaves use this.
+  * `BlockInt8Codec` ("int8-block"): blockwise scales along one axis.
+    The KV cache (seq axis), the FSDP weight gather (feature axis) and
+    the MoE all-to-all wire format are all instances of this codec.
+
+The effective absolute error bound of either codec is scale/2 per
+element, recorded by construction (scale lives in the payload because it
+is data-dependent; axis/block/bits are static header params).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .base import Codec, register
+from .container import Container
+
+_QDTYPES = {8: jnp.int8, 16: jnp.int16}
+
+
+def qmax_of(bits: int) -> int:
+    return 2 ** (bits - 1) - 1
+
+
+# ---------------------------------------------------------------------------
+# Shared quantization math (single implementation; every integer surface
+# in the repo routes through these).
+# ---------------------------------------------------------------------------
+
+def quantize(x: jax.Array, qmax: float, qdtype,
+             scale: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """Per-tensor symmetric quantization.  `scale` overrides the derived
+    amax/qmax scale (shared-scale collectives pass a pre-reduced one)."""
+    xf = x.astype(jnp.float32)
+    if scale is None:
+        scale = jnp.maximum(jnp.max(jnp.abs(xf)) / qmax, 1e-30)
+    q = jnp.clip(jnp.rint(xf / scale), -qmax, qmax).astype(qdtype)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array,
+               dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def _split(x: jax.Array, axis: int, block: int) -> jax.Array:
+    s = x.shape[axis]
+    assert s % block == 0, (x.shape, axis, block)
+    return x.reshape(x.shape[:axis] + (s // block, block)
+                     + x.shape[axis + 1:])
+
+
+def _merge(xb: jax.Array, axis: int) -> jax.Array:
+    return xb.reshape(xb.shape[:axis]
+                      + (xb.shape[axis] * xb.shape[axis + 1],)
+                      + xb.shape[axis + 2:])
+
+
+def block_quantize(x: jax.Array, axis: int, block: int,
+                   qmax: float = 127.0) -> Tuple[jax.Array, jax.Array]:
+    """Blockwise int8 quantization along `axis` (length must divide into
+    `block`-sized groups).  Returns (q int8 of x.shape, scale f32 of
+    x.shape with the `axis` dim shrunk to n_blocks)."""
+    axis = axis % x.ndim
+    xb = _split(x, axis, block)
+    amax = jnp.max(jnp.abs(xb), axis=axis + 1, keepdims=True)
+    scale = jnp.maximum(amax / qmax, 1e-30).astype(jnp.float32)
+    q = jnp.clip(jnp.rint(xb.astype(jnp.float32) / scale), -qmax, qmax
+                 ).astype(jnp.int8)
+    return _merge(q, axis), jnp.squeeze(scale, axis + 1)
+
+
+def block_dequantize(q: jax.Array, scale: jax.Array, axis: int, block: int,
+                     dtype=jnp.float32) -> jax.Array:
+    axis = axis % q.ndim
+    qb = _split(q, axis, block)
+    x = qb.astype(jnp.float32) * jnp.expand_dims(scale, axis + 1)
+    return _merge(x.astype(dtype), axis)
+
+
+# ---------------------------------------------------------------------------
+# Codecs
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Int8Codec(Codec):
+    """Per-tensor narrow-int codec ("int8" / "int16" by `bits`)."""
+    bits: int = 8
+    version = 1
+
+    @property
+    def name(self) -> str:
+        return f"int{self.bits}"
+
+    @property
+    def qmax(self) -> int:
+        return qmax_of(self.bits)
+
+    @property
+    def qdtype(self):
+        return _QDTYPES[self.bits]
+
+    def encode(self, x, *, cfg=None) -> Container:
+        q, scale = quantize(x, float(self.qmax), self.qdtype)
+        return Container(self._header(x, bits=self.bits),
+                         {"q": q, "scale": scale})
+
+    def decode(self, c: Container, *, like=None) -> jax.Array:
+        c = self.unpack(c)
+        y = dequantize(c.payload["q"], c.payload["scale"])
+        return self._finish(y, c.header, like)
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockInt8Codec(Codec):
+    """Blockwise int8 codec: one f32 scale per `block` elements along
+    `axis`.  KV caches use (axis=seq, block=128); FSDP weight gathers and
+    the MoE all-to-all use (axis=-1, block=feature-block)."""
+    axis: int = -1
+    block: int = 128
+    name = "int8-block"
+    version = 1
+
+    def encode(self, x, *, cfg=None) -> Container:
+        axis = self.axis % x.ndim
+        q, scale = block_quantize(x, axis, self.block)
+        return Container(self._header(x, axis=axis, block=self.block),
+                         {"q": q, "scale": scale})
+
+    def decode(self, c: Container, *, like=None) -> jax.Array:
+        c = self.unpack(c)
+        y = block_dequantize(c.payload["q"], c.payload["scale"],
+                             int(c.header.param("axis")),
+                             int(c.header.param("block")))
+        return self._finish(y, c.header, like)
+
+
+register("int8", lambda **kw: Int8Codec(bits=8, **kw))
+register("int16", lambda **kw: Int8Codec(bits=16, **kw))
+register("int8-block", lambda **kw: BlockInt8Codec(**kw))

@@ -1,5 +1,9 @@
 """cuSZ core: dual-quantization + customized canonical Huffman coding,
 plus the framework integration surfaces (gradient / KV-cache / checkpoint
-compression) and the cuZFP-like comparison baseline."""
+compression) and the cuZFP-like comparison baseline.
+
+These modules are the *engines*; the public compression contract is the
+`repro.codecs` registry (`codecs.get("cusz").encode/decode` etc.), which
+wraps them behind one Codec protocol and a self-describing Container."""
 from . import dualquant, huffman, compressor, metrics, zfp_like, gradient, kvcache  # noqa: F401
 from .compressor import CompressorConfig, CompressedBlob, compress, decompress, roundtrip  # noqa: F401

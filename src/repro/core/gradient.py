@@ -20,6 +20,7 @@ share one scale and the integer sum is exact.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Any, Tuple
 
 import jax
@@ -27,55 +28,59 @@ import jax.numpy as jnp
 
 from repro.dist.context import constrain_like_params
 
-_INT_BITS = {"int8": 8, "int16": 16}
-_DTYPES = {"int8": jnp.int8, "int16": jnp.int16}
-
 
 def compressed_psum_mean(grads_podded: Any, mode: str, npods: int) -> Any:
     """grads_podded: pytree with a leading pod axis of size `npods`
     (sharded over the 'pod' mesh axis).  Returns the pod-mean pytree
     without the leading axis.
 
-    mode: 'none' | 'int8' | 'int16'.
+    mode: 'none' | 'int8' | 'int16' — a `repro.codecs` registry name; the
+    quantization math is the registered codec's (`codecs.int8.quantize`
+    with the shared cross-pod scale).
     """
     if mode == "none":
         return jax.tree.map(lambda g: jnp.mean(g, axis=0), grads_podded)
-    bits = _INT_BITS[mode]
-    dt = _DTYPES[mode]
-    qmax = float(2 ** (bits - 1) - 1)
+    from repro import codecs
+    from repro.codecs import int8 as I8
 
-    qeff = float(int(qmax) // npods)                    # per-pod level budget
+    codec = codecs.get(mode)                            # Int8Codec(bits=…)
+    qeff = float(codec.qmax // npods)                   # per-pod level budget
 
     grads_podded = constrain_like_params(grads_podded, lead_axis="pod")
 
     def one(g):
-        # shared scale: amax over *all* pods (tiny fp32 all-reduce)
-        amax = jnp.max(jnp.abs(g))                      # reduces pod axis too
-        scale = jnp.maximum(amax / qeff, 1e-30)
-        q = jnp.clip(jnp.rint(g / scale), -qeff, qeff).astype(dt)
+        # shared scale: amax over *all* pods (tiny fp32 all-reduce),
+        # quantized levels clipped to the per-pod budget qeff
+        q, scale = I8.quantize(g, qeff, codec.qdtype)
         # integer sum over the pod-sharded axis -> *narrow* integer
         # all-reduce in HLO.  No overflow: |q| <= floor(qmax/npods) by the
         # shared scale, so the sum stays within the narrow type.
-        s = jnp.sum(q, axis=0, dtype=dt)
+        s = jnp.sum(q, axis=0, dtype=codec.qdtype)
         return s.astype(jnp.float32) * (scale / npods)
 
     return jax.tree.map(one, grads_podded)
 
 
 # ---------------------------------------------------------------------------
-# Full-pipeline cuSZ gradient blobs (cross-pod WAN link / gradient
-# accumulation offload).  The int8 psum path above stays the in-step
-# collective; these produce a storable error-bounded blob at an explicit
-# bound.  Kernel dispatch policy flows through `cfg.kernel_impl`.
+# DEPRECATED cuSZ gradient-blob entry points.  The codec API replaces the
+# `(packed_dict, eb)` out-of-band-metadata plumbing (which also lost the
+# source dtype):
+#
+#     from repro import codecs
+#     c = codecs.get("cusz", cfg=cfg).encode(g)     # self-describing
+#     g2 = codecs.decode(c)
 # ---------------------------------------------------------------------------
 
 def cusz_compress_gradient(g: jax.Array, cfg) -> Tuple[dict, float]:
-    """Run one gradient tensor through the full cuSZ pipeline.
+    """DEPRECATED: use `codecs.get("cusz", cfg=cfg).encode(g)`.
 
-    cfg: a `compressor.CompressorConfig` (carries eb, nbins, chunking AND
-    the kernel dispatch policy).  Returns (packed host blob, resolved eb);
-    decompression needs the same cfg parameters.
+    Returns (packed host blob, resolved eb); decompression needs the same
+    cfg parameters back — the replacement Container carries them itself.
     """
+    warnings.warn("cusz_compress_gradient is deprecated; use "
+                  "repro.codecs.get('cusz', cfg=cfg).encode(g) — the "
+                  "returned Container is self-describing",
+                  DeprecationWarning, stacklevel=2)
     from repro.core import compressor as CZ
 
     blob, eb = CZ.compress(g, cfg)
@@ -83,7 +88,11 @@ def cusz_compress_gradient(g: jax.Array, cfg) -> Tuple[dict, float]:
 
 
 def cusz_decompress_gradient(packed: dict, eb: float, shape, cfg) -> jax.Array:
-    """Inverse of `cusz_compress_gradient` (same cfg on both sides)."""
+    """DEPRECATED: use `codecs.decode(container)` (same cfg on both sides
+    is no longer the caller's burden)."""
+    warnings.warn("cusz_decompress_gradient is deprecated; use "
+                  "repro.codecs.decode(container)",
+                  DeprecationWarning, stacklevel=2)
     from repro.core import compressor as CZ
 
     return CZ.decompress(CZ.unpack_blob(packed), cfg, eb, tuple(shape))
@@ -91,21 +100,24 @@ def cusz_decompress_gradient(packed: dict, eb: float, shape, cfg) -> jax.Array:
 
 def quantize_tensor(g: jax.Array, mode: str) -> Tuple[jax.Array, jax.Array]:
     """Standalone PREQUANT of one tensor (used by tests & the checkpoint
-    codec fast path).  Returns (q, scale)."""
-    bits = _INT_BITS[mode]
-    qmax = float(2 ** (bits - 1) - 1)
-    amax = jnp.max(jnp.abs(g))
-    scale = jnp.maximum(amax / qmax, 1e-30)
-    q = jnp.clip(jnp.rint(g / scale), -qmax, qmax).astype(_DTYPES[mode])
-    return q, scale
+    codec fast path).  Returns (q, scale); the math is
+    `codecs.int8.quantize` — the registered codec owns it."""
+    from repro import codecs
+    from repro.codecs import int8 as I8
+
+    codec = codecs.get(mode)
+    return I8.quantize(g, float(codec.qmax), codec.qdtype)
 
 
 def dequantize_tensor(q: jax.Array, scale: jax.Array) -> jax.Array:
-    return q.astype(jnp.float32) * scale
+    from repro.codecs import int8 as I8
+
+    return I8.dequantize(q, scale)
 
 
 def error_bound_of(g: jax.Array, mode: str) -> jax.Array:
     """The effective absolute error bound (= scale/2) for a tensor."""
-    bits = _INT_BITS[mode]
-    qmax = float(2 ** (bits - 1) - 1)
+    from repro import codecs
+
+    qmax = float(codecs.get(mode).qmax)
     return jnp.max(jnp.abs(g)) / qmax / 2.0

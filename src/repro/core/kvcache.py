@@ -11,6 +11,7 @@ the cache there — DESIGN.md §7).
 """
 from __future__ import annotations
 
+import warnings
 from typing import NamedTuple, Tuple
 
 import jax
@@ -21,27 +22,28 @@ _QMAX = 127.0
 
 
 class QuantKV(NamedTuple):
+    """In-memory quantized-cache format: the `"int8-block"` codec's
+    payload as a NamedTuple (the decode-step hot path indexes it
+    directly; `kv_quantize`/`kv_dequantize` are the codec's math)."""
     q: jax.Array          # int8, same shape as the source
     scale: jax.Array      # f32, shape = source with seq axis / SEQ_BLOCK
 
 
 def kv_quantize(x: jax.Array, seq_axis: int) -> QuantKV:
     """Blockwise int8 quantization along `seq_axis` (length must be a
-    multiple of SEQ_BLOCK; cache buffers are allocated that way)."""
-    s = x.shape[seq_axis]
-    assert s % SEQ_BLOCK == 0, (x.shape, seq_axis)
-    xb = _split(x, seq_axis)                     # [..., nb, SEQ_BLOCK, ...]
-    amax = jnp.max(jnp.abs(xb), axis=seq_axis + 1, keepdims=True)
-    scale = jnp.maximum(amax / _QMAX, 1e-30).astype(jnp.float32)
-    q = jnp.clip(jnp.rint(xb.astype(jnp.float32) / scale), -_QMAX, _QMAX
-                 ).astype(jnp.int8)
-    return QuantKV(_merge(q, seq_axis), jnp.squeeze(scale, seq_axis + 1))
+    multiple of SEQ_BLOCK; cache buffers are allocated that way).
+    Delegates to the registered `"int8-block"` codec's quantization."""
+    from repro.codecs import int8 as I8
+
+    assert x.shape[seq_axis] % SEQ_BLOCK == 0, (x.shape, seq_axis)
+    q, scale = I8.block_quantize(x, seq_axis, SEQ_BLOCK)
+    return QuantKV(q, scale)
 
 
 def kv_dequantize(qkv: QuantKV, seq_axis: int, dtype=jnp.bfloat16) -> jax.Array:
-    qb = _split(qkv.q, seq_axis)
-    x = qb.astype(jnp.float32) * jnp.expand_dims(qkv.scale, seq_axis + 1)
-    return _merge(x.astype(dtype), seq_axis)
+    from repro.codecs import int8 as I8
+
+    return I8.block_dequantize(qkv.q, qkv.scale, seq_axis, SEQ_BLOCK, dtype)
 
 
 def kv_update_block(qkv: QuantKV, new: jax.Array, pos, seq_axis: int) -> QuantKV:
@@ -73,18 +75,25 @@ def kv_update_block(qkv: QuantKV, new: jax.Array, pos, seq_axis: int) -> QuantKV
 
 
 # ---------------------------------------------------------------------------
-# cuSZ offload codec: evicted / resharded cache blocks go through the full
+# cuSZ offload: evicted / resharded cache blocks go through the full
 # dual-quant + Huffman pipeline (host offload, prefill->decode reshard).
-# The int8 path above is the in-memory format; this is the wire/disk one.
-# Kernel dispatch policy flows through `cfg.kernel_impl`.
+# The int8 path above is the in-memory format; the wire/disk one is the
+# `"cusz"` codec:
+#
+#     c = codecs.get("cusz", cfg=cfg).encode(block)   # keeps bf16 dtype
+#     block2 = codecs.decode(c)
+#
+# The entry points below are DEPRECATED shims over that path: they lose
+# the source dtype (restore hardcodes the caller's) and need eb/shape fed
+# back out-of-band — exactly the bug class the Container header fixes.
 # ---------------------------------------------------------------------------
 
 def kv_offload_pack(x: jax.Array, cfg) -> Tuple[dict, float]:
-    """Compress a cache block (f32/bf16 tensor) into a packed host blob.
-
-    cfg: a `compressor.CompressorConfig`; returns (packed blob, resolved
-    eb).  Restore with `kv_offload_restore` under the same cfg.
-    """
+    """DEPRECATED: use `codecs.get("cusz", cfg=cfg).encode(x)`."""
+    warnings.warn("kv_offload_pack is deprecated; use "
+                  "repro.codecs.get('cusz', cfg=cfg).encode(x) — the "
+                  "returned Container records dtype/shape/eb itself",
+                  DeprecationWarning, stacklevel=2)
     from repro.core import compressor as CZ
 
     blob, eb = CZ.compress(jnp.asarray(x, jnp.float32), cfg)
@@ -93,7 +102,11 @@ def kv_offload_pack(x: jax.Array, cfg) -> Tuple[dict, float]:
 
 def kv_offload_restore(packed: dict, eb: float, shape, cfg,
                        dtype=jnp.bfloat16) -> jax.Array:
-    """Inverse of `kv_offload_pack`; returns the block in `dtype`."""
+    """DEPRECATED: use `codecs.decode(container)` (dtype comes from the
+    container header, not a caller-side default)."""
+    warnings.warn("kv_offload_restore is deprecated; use "
+                  "repro.codecs.decode(container)",
+                  DeprecationWarning, stacklevel=2)
     from repro.core import compressor as CZ
 
     out = CZ.decompress(CZ.unpack_blob(packed), cfg, eb, tuple(shape))
@@ -103,15 +116,3 @@ def kv_offload_restore(packed: dict, eb: float, shape, cfg,
 def error_bound(qkv: QuantKV) -> jax.Array:
     """Per-block abs error bound = scale/2 (the paper's eb semantics)."""
     return qkv.scale / 2.0
-
-
-def _split(x: jax.Array, seq_axis: int) -> jax.Array:
-    s = x.shape[seq_axis]
-    shp = x.shape[:seq_axis] + (s // SEQ_BLOCK, SEQ_BLOCK) + x.shape[seq_axis + 1:]
-    return x.reshape(shp)
-
-
-def _merge(xb: jax.Array, seq_axis: int) -> jax.Array:
-    shp = xb.shape[:seq_axis] + (xb.shape[seq_axis] * SEQ_BLOCK,) \
-        + xb.shape[seq_axis + 2:]
-    return xb.reshape(shp)

@@ -14,10 +14,13 @@ eb semantics, weight-relative).
 """
 from __future__ import annotations
 
+import warnings
 from typing import Any
 
 import jax
 import jax.numpy as jnp
+
+from repro.codecs import int8 as I8
 
 QBLOCK = 128
 _SKIP_SUBSTR = ("norm",)     # tiny / sensitive leaves stay uncompressed
@@ -30,13 +33,10 @@ def _quantizable(path_names, x) -> bool:
 
 
 def _qdq(x: jax.Array) -> jax.Array:
-    """quantize->dequantize (the value the forward pass sees)."""
-    nb = x.shape[-1] // QBLOCK
-    xf = x.astype(jnp.float32).reshape(x.shape[:-1] + (nb, QBLOCK))
-    scale = jnp.maximum(jnp.max(jnp.abs(xf), axis=-1, keepdims=True) / 127.0,
-                        1e-30)
-    q = jnp.clip(jnp.rint(xf / scale), -127, 127).astype(jnp.int8)
-    return (q.astype(jnp.float32) * scale).reshape(x.shape).astype(x.dtype)
+    """quantize->dequantize (the value the forward pass sees) — the
+    `"int8-block"` codec's math with (axis=-1, block=QBLOCK)."""
+    q, scale = I8.block_quantize(x.astype(jnp.float32), -1, QBLOCK)
+    return I8.block_dequantize(q, scale, -1, QBLOCK, x.dtype)
 
 
 def compress_for_gather(params: Any) -> Any:
@@ -88,23 +88,17 @@ def gather_dequant_leaf(p: jax.Array, spec, mesh):
     backward: identity to the master (custom_vjp STE)."""
     from jax.sharding import NamedSharding
 
-    nb = p.shape[-1] // QBLOCK
     tgt = _drop_data(spec)
     stgt = tgt  # scale shares the layout (last dim replicated anyway)
 
     @jax.custom_vjp
     def qdq_ste(x):
-        xf = x.astype(jnp.float32).reshape(x.shape[:-1] + (nb, QBLOCK))
-        scale = jnp.maximum(jnp.max(jnp.abs(xf), axis=-1) / 127.0, 1e-30)
-        q = jnp.clip(jnp.rint(xf / scale[..., None]), -127, 127
-                     ).astype(jnp.int8).reshape(x.shape)
+        q, scale = I8.block_quantize(x.astype(jnp.float32), -1, QBLOCK)
         # the resharding (FSDP all-gather) happens HERE, on int8 + scales
         q = jax.lax.with_sharding_constraint(q, NamedSharding(mesh, tgt))
         scale = jax.lax.with_sharding_constraint(
             scale, NamedSharding(mesh, stgt))
-        out = (q.astype(jnp.float32).reshape(x.shape[:-1] + (nb, QBLOCK))
-               * scale[..., None]).reshape(x.shape)
-        return out.astype(x.dtype)
+        return I8.block_dequantize(q, scale, -1, QBLOCK, x.dtype)
 
     def fwd(x):
         return qdq_ste(x), None
@@ -141,12 +135,16 @@ def gather_dequant_tree(params: Any, specs: Any, mesh) -> Any:
 
 def checkpoint_codec_config(eb_valrel: float = 1e-5,
                             kernel_impl=None, chunk_size: int = 4096):
-    """The weight-checkpoint cuSZ config (value-range-relative bound,
-    lane-aligned TPU blocks).  `io/checkpoint` delegates here so the
-    weight-codec policy — including the kernel dispatch choice — lives
-    with the weight-compression module; consumers thread `kernel_impl`
-    through `CompressorConfig` rather than hardcoding an impl.
-    """
+    """DEPRECATED: the weight-checkpoint codec policy now lives in
+    `io.checkpoint.CheckpointPolicy` (per-leaf codec selection from one
+    config).  Kept for one release; returns the same cuSZ config the
+    policy's "cusz" leaf codec uses (value-range-relative bound,
+    lane-aligned TPU blocks)."""
+    warnings.warn("checkpoint_codec_config is deprecated; configure "
+                  "io.checkpoint.CheckpointPolicy (or "
+                  "codecs.get('cusz', eb=..., eb_mode='valrel', "
+                  "use_tpu_blocks=True)) instead",
+                  DeprecationWarning, stacklevel=2)
     from repro.core import compressor as CZ
 
     return CZ.CompressorConfig(eb=eb_valrel, eb_mode="valrel",

@@ -64,11 +64,13 @@ def _inv_negabinary(u: jax.Array) -> jax.Array:
     return ((u ^ mask) - mask).astype(jnp.int32)
 
 
-@partial(jax.jit, static_argnames=("planes",))
-def _roundtrip_blocks(xb: jax.Array, planes: int) -> jax.Array:
-    """xb: [..., 4,4,..] float32 blocks (block axes last ndim)."""
-    nd = xb.ndim // 2
-    baxes = tuple(range(nd, 2 * nd))
+@partial(jax.jit, static_argnames=("planes", "nblock"))
+def encode_blocks(xb: jax.Array, planes: int, nblock: int):
+    """xb: [..., 4,..,4] float32 blocks (block axes = the LAST `nblock`
+    axes).  Returns (u, e): the plane-truncated negabinary coefficients
+    (uint32, xb.shape) and the per-block exponents (f32, block dims 1).
+    This is the storable half; `decode_blocks` is its inverse."""
+    baxes = tuple(range(xb.ndim - nblock, xb.ndim))
     # block exponent alignment
     amax = jnp.max(jnp.abs(xb), axis=baxes, keepdims=True)
     e = jnp.where(amax > 0, jnp.ceil(jnp.log2(jnp.maximum(amax, 1e-38))), 0.0)
@@ -81,11 +83,23 @@ def _roundtrip_blocks(xb: jax.Array, planes: int) -> jax.Array:
     # fixed rate: keep top `planes` bit planes of each 32-bit coefficient
     keep = jnp.uint32(0xFFFFFFFF) << jnp.uint32(32 - min(planes, 32)) \
         if planes < 32 else jnp.uint32(0xFFFFFFFF)
-    u = u & keep
+    return u & keep, e
+
+
+@partial(jax.jit, static_argnames=("nblock",))
+def decode_blocks(u: jax.Array, e: jax.Array, nblock: int) -> jax.Array:
+    baxes = tuple(range(u.ndim - nblock, u.ndim))
     q = _inv_negabinary(u)
     for ax in reversed(baxes):
         q = _inv_lift(q, ax)
-    return q.astype(jnp.float32) / (1 << _Q) / scale
+    return q.astype(jnp.float32) / (1 << _Q) * jnp.exp2(e)
+
+
+def _roundtrip_blocks(xb: jax.Array, planes: int) -> jax.Array:
+    """xb: [..., 4,4,..] float32 blocks (block axes last ndim)."""
+    nd = xb.ndim // 2
+    u, e = encode_blocks(xb, planes, nd)
+    return decode_blocks(u, e, nd)
 
 
 def compress_decompress(x: jax.Array, rate_bits: float) -> Tuple[jax.Array, float]:

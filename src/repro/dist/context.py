@@ -37,8 +37,8 @@ from repro.dist.sharding import dp_axes as _mesh_dp_axes
 _mesh_stack: List[Any] = []
 _spec_stack: List[Any] = []
 _dp_override_stack: List[Tuple[str, ...]] = []
-_weight_compress_stack: List[bool] = []
-_a2a_compress_stack: List[bool] = []
+_weight_compress_stack: List[Optional[str]] = []   # armed codec names
+_a2a_compress_stack: List[Optional[str]] = []
 
 
 def _is_spec(x) -> bool:
@@ -153,24 +153,63 @@ def constrain_like_params(tree, lead_axis: Optional[str] = None):
 
 
 # ---------------------------------------------------------------------------
-# compression hooks
+# compression hooks.  Each hook arms a *codec* (a `repro.codecs` registry
+# name); passing True selects the default integer codec, False/None/"none"
+# disarms.  The consuming sites (`weights.gather_dequant_tree`,
+# `moe._compressed_reshard`) pull the armed codec from here, so the wire
+# format is a registry choice, not a hardcoded quantizer.
 # ---------------------------------------------------------------------------
 
-def use_weight_compress(active: bool):
-    """Arm the int8 FSDP weight-gather hook (read via
-    ``weight_gather_info`` inside the model's period scan)."""
-    return _pushed(_weight_compress_stack, bool(active))
+_DEFAULT_WIRE_CODEC = "int8-block"
 
 
-def use_a2a_compress(active: bool):
-    """Arm int8 MoE dispatch/combine resharding (read via
-    ``a2a_compress_active`` inside ``moe_forward``)."""
-    return _pushed(_a2a_compress_stack, bool(active))
+def _codec_name(active) -> Optional[str]:
+    if active is True:
+        return _DEFAULT_WIRE_CODEC
+    if not active or active == "none":
+        return None
+    # legacy mode string: "int8" has always meant blockwise-int8 on the
+    # wire (TrainConfig.a2a_compress / weight_compress), not the
+    # per-tensor "int8" codec
+    if active == "int8":
+        return _DEFAULT_WIRE_CODEC
+    from repro import codecs
+    name = str(active)
+    if name not in codecs.names():
+        raise ValueError(f"unknown compression codec {name!r}; "
+                         f"registered: {codecs.names()}")
+    return name
+
+
+def use_weight_compress(active):
+    """Arm the FSDP weight-gather compression hook (read via
+    ``weight_gather_info`` inside the model's period scan).  `active`:
+    bool or a codec registry name ("int8-block"/"int8")."""
+    return _pushed(_weight_compress_stack, _codec_name(active))
+
+
+def use_a2a_compress(active):
+    """Arm compressed MoE dispatch/combine resharding (read via
+    ``a2a_compress_active``/``a2a_codec`` inside ``moe_forward``).
+    `active`: bool or a codec registry name."""
+    return _pushed(_a2a_compress_stack, _codec_name(active))
 
 
 def a2a_compress_active() -> bool:
     return bool(_a2a_compress_stack and _a2a_compress_stack[-1]
                 and current_mesh() is not None)
+
+
+def a2a_codec() -> Optional[str]:
+    """Registry name of the armed all-to-all wire codec (None = off)."""
+    return _a2a_compress_stack[-1] if a2a_compress_active() else None
+
+
+def weight_compress_codec() -> Optional[str]:
+    """Registry name of the armed weight-gather codec (None = off)."""
+    if not (_weight_compress_stack and _weight_compress_stack[-1]):
+        return None
+    return _weight_compress_stack[-1]
 
 
 def _drop_lead(spec: P) -> P:

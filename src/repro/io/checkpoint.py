@@ -1,11 +1,19 @@
-"""Checkpoint save/restore with the cuSZ codec on the write path.
+"""Checkpoint save/restore on the `repro.codecs` API.
 
-Modes:
-  'lossless' — raw arrays (npz)
-  'cusz'     — float arrays >= CUSZ_MIN_SIZE go through the full cuSZ
-               pipeline (dual-quant + canonical Huffman) at a value-range-
-               relative error bound; everything else stays lossless.
-               Manifest records eb + achieved ratio per tensor.
+Every leaf goes through a registered codec; which one is decided per
+leaf by a single `CheckpointPolicy` (replacing the old `mode=` string +
+`weights.checkpoint_codec_config` special case):
+
+    policy = CheckpointPolicy(codec="cusz", eb_valrel=1e-5,
+                              rules=(("opt", "int8"),))
+    save_checkpoint(d, step, tree, policy=policy)
+
+Per tensor, the manifest records the codec id, codec version and the
+container header — so restore needs nothing from the caller: the
+`Container` alone decodes (dtype/shape/eb all ride in the header; the
+old code hardcoded restore dtypes and passed eb/shape out-of-band).
+Lossy codecs that fail to beat raw bytes fall back to "lossless" per
+tensor (the codec never expands a checkpoint).
 
 Restore is elastic: leaves are placed with whatever shardings the *new*
 mesh prescribes (re-sharding on restore = the elastic-rescale path,
@@ -20,16 +28,61 @@ import json
 import os
 import shutil
 import threading
-from typing import Any, Dict, Optional
+import warnings
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import numpy as np
 
-from repro.core import compressor as CZ
-from repro.core import weights as WZ
+from repro import codecs
 
 CUSZ_MIN_SIZE = 4096
 _SEP = "::"
+_FIELD_MARK = "__c__"
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointPolicy:
+    """Per-leaf codec selection from one config.
+
+    `codec` applies to every eligible float leaf; `rules` overrides by
+    key substring (first match wins, value is a registry name — use
+    "lossless" to exempt a subtree).  Ineligible leaves (non-float,
+    small, non-finite, zero-range) always store lossless.
+    """
+    codec: str = "lossless"                      # codec for eligible leaves
+    eb_valrel: float = 1e-5                      # cusz value-range-rel bound
+    min_size: int = CUSZ_MIN_SIZE                # lossy-eligibility floor
+    kernel_impl: Optional[str] = None            # cusz dispatch policy
+    rules: Tuple[Tuple[str, str], ...] = ()      # (key substring, codec id)
+
+    def codec_for(self, key: str, arr: np.ndarray) -> str:
+        name = self.codec
+        for sub, override in self.rules:
+            if sub in key:
+                name = override
+                break
+        if name == "lossless" or not self._eligible(arr):
+            return "lossless"
+        return name
+
+    def make_codec(self, name: str) -> codecs.Codec:
+        if name == "cusz":
+            return codecs.get("cusz", eb=self.eb_valrel, eb_mode="valrel",
+                              use_tpu_blocks=True,
+                              kernel_impl=self.kernel_impl)
+        return codecs.get(name)
+
+    def _eligible(self, arr: np.ndarray) -> bool:
+        try:
+            floating = jax.numpy.issubdtype(arr.dtype, jax.numpy.floating)
+        except TypeError:
+            floating = False
+        if not floating or arr.size < self.min_size:
+            return False
+        f = np.asarray(arr, np.float32) if arr.dtype != np.float32 else arr
+        return bool(np.all(np.isfinite(f))
+                    and float(np.max(f) - np.min(f)) > 0)
 
 
 def _flatten(tree) -> Dict[str, np.ndarray]:
@@ -41,46 +94,59 @@ def _flatten(tree) -> Dict[str, np.ndarray]:
     return flat
 
 
-def save_checkpoint(ckpt_dir: str, step: int, tree, mode: str = "lossless",
-                    eb_valrel: float = 1e-5, background: bool = False,
-                    kernel_impl: Optional[str] = None):
-    """`kernel_impl` selects the compressor's kernel dispatch policy
-    (None = ambient/auto); it flows through `CompressorConfig`."""
+def _legacy_policy(mode, eb_valrel, kernel_impl) -> CheckpointPolicy:
+    warnings.warn(
+        "save_checkpoint(mode=..., eb_valrel=..., kernel_impl=...) is "
+        "deprecated; pass policy=CheckpointPolicy(codec=..., "
+        "eb_valrel=..., kernel_impl=...) instead",
+        DeprecationWarning, stacklevel=3)
+    return CheckpointPolicy(
+        codec="cusz" if mode == "cusz" else "lossless",
+        eb_valrel=1e-5 if eb_valrel is None else eb_valrel,
+        kernel_impl=kernel_impl)
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree, mode: Optional[str] = None,
+                    eb_valrel: Optional[float] = None,
+                    background: bool = False,
+                    kernel_impl: Optional[str] = None,
+                    policy: Optional[CheckpointPolicy] = None):
+    """Write `tree` under `ckpt_dir/step_<step>` via the codec registry.
+
+    `policy` selects codecs per leaf; the legacy `mode=`/`eb_valrel=`/
+    `kernel_impl=` kwargs still work behind a DeprecationWarning."""
+    if policy is None:
+        if mode is not None or eb_valrel is not None \
+                or kernel_impl is not None:
+            policy = _legacy_policy(mode, eb_valrel, kernel_impl)
+        else:
+            policy = CheckpointPolicy()
     if background:
         t = threading.Thread(target=save_checkpoint,
-                             args=(ckpt_dir, step, tree, mode, eb_valrel,
-                                   False, kernel_impl), daemon=True)
+                             args=(ckpt_dir, step, tree),
+                             kwargs={"policy": policy}, daemon=True)
         t.start()
         return t
     flat = _flatten(tree)
     tmp = os.path.join(ckpt_dir, f".tmp_step_{step:08d}")
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
     os.makedirs(tmp, exist_ok=True)
-    manifest: Dict[str, Any] = {"step": step, "mode": mode, "tensors": {}}
+    manifest: Dict[str, Any] = {"step": step, "format": 2,
+                                "policy": policy.codec, "tensors": {}}
     arrays: Dict[str, np.ndarray] = {}
+    codec_cache: Dict[str, codecs.Codec] = {}
     for key, arr in flat.items():
-        entry: Dict[str, Any] = {"shape": list(arr.shape),
-                                 "dtype": str(arr.dtype)}
-        if (mode == "cusz" and arr.dtype == np.float32
-                and arr.size >= CUSZ_MIN_SIZE and np.all(np.isfinite(arr))
-                and float(np.max(arr) - np.min(arr)) > 0):
-            cfg = WZ.checkpoint_codec_config(eb_valrel,
-                                             kernel_impl=kernel_impl)
-            blob, eb = CZ.compress(arr, cfg)
-            packed = CZ.pack_blob(blob)
-            # fall back to raw when the codec doesn't win (entropy-dense
-            # tensors, e.g. random init at tight eb, would expand)
-            if (int(blob.n_outliers) <= blob.out_idx.shape[0]
-                    and CZ.packed_nbytes(packed) < arr.nbytes):
-                entry.update(codec="cusz", eb=eb,
-                             chunk_size=cfg.chunk_size,
-                             ratio=arr.nbytes / CZ.packed_nbytes(packed))
-                for f, v in packed.items():
-                    arrays[f"{key}{_SEP}__cusz__{_SEP}{f}"] = np.asarray(v)
-                manifest["tensors"][key] = entry
-                continue
-        entry["codec"] = "raw"
-        arrays[key] = arr
+        name = policy.codec_for(key, arr)
+        if name not in codec_cache:
+            codec_cache[name] = policy.make_codec(name)
+        packed, name = _encode_leaf(codec_cache, name, arr)
+        header, fields = codecs.to_arrays(packed)
+        for f, v in fields.items():
+            arrays[f"{key}{_SEP}{_FIELD_MARK}{_SEP}{f}"] = v
+        entry = {"codec": name, "version": packed.header.version,
+                 "header": header}
+        if name != "lossless":
+            entry["ratio"] = arr.nbytes / max(1, packed.nbytes)
         manifest["tensors"][key] = entry
     np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
@@ -89,6 +155,27 @@ def save_checkpoint(ckpt_dir: str, step: int, tree, mode: str = "lossless",
         shutil.rmtree(final)
     os.rename(tmp, final)
     return final
+
+
+def _encode_leaf(codec_cache, name, arr):
+    """encode+pack one leaf; lossy codecs that don't win (entropy-dense
+    tensors, e.g. random init at tight eb, would expand) or can't
+    represent the tensor (eb below f32 resolution, block-misaligned
+    dims) fall back to raw."""
+    if name != "lossless":
+        try:
+            codec = codec_cache[name]
+            c = codec.encode(arr)
+            if codec.valid(c):
+                packed = codec.pack(c)
+                if packed.nbytes < arr.nbytes:
+                    return packed, name
+        except (ValueError, AssertionError):
+            pass
+        name = "lossless"
+        if name not in codec_cache:
+            codec_cache[name] = codecs.get("lossless")
+    return codec_cache[name].pack(codec_cache[name].encode(arr)), name
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:
@@ -104,30 +191,31 @@ def load_checkpoint(ckpt_dir: str, template, step: Optional[int] = None,
     """template: pytree with the target treedef (e.g. fresh init or
     eval_shape).  shardings: optional matching pytree of NamedSharding for
     elastic placement on the current mesh.  kernel_impl: dispatch policy
-    for the decode path (None = ambient/auto)."""
+    for the cusz decode path (None = ambient/auto)."""
     if step is None:
         step = latest_step(ckpt_dir)
         assert step is not None, f"no checkpoints under {ckpt_dir}"
     d = os.path.join(ckpt_dir, f"step_{step:08d}")
     with open(os.path.join(d, "manifest.json")) as f:
         manifest = json.load(f)
+    fmt = manifest.get("format", 1)
+    if fmt != 2:
+        raise ValueError(
+            f"checkpoint {d} uses manifest format {fmt}; this reader "
+            f"supports format 2 (per-tensor codec containers).  Format-1 "
+            f"checkpoints predate the repro.codecs API — re-save from a "
+            f"checkout that wrote them.")
     arrays = np.load(os.path.join(d, "arrays.npz"))
 
     def restore_one(key, entry):
-        if entry["codec"] == "cusz":
-            prefix = f"{key}{_SEP}__cusz__{_SEP}"
-            packed = {k[len(prefix):]: arrays[k] for k in arrays.files
-                      if k.startswith(prefix)}
-            blob = CZ.unpack_blob(packed)
-            cfg = dataclasses.replace(
-                WZ.checkpoint_codec_config(
-                    kernel_impl=kernel_impl,
-                    chunk_size=entry.get("chunk_size", 4096)),
-                eb=1.0, eb_mode="abs")
-            out = CZ.decompress(blob, cfg, entry["eb"],
-                                tuple(entry["shape"]))
-            return np.asarray(jax.device_get(out))
-        return arrays[key]
+        prefix = f"{key}{_SEP}{_FIELD_MARK}{_SEP}"
+        fields = {k[len(prefix):]: arrays[k] for k in arrays.files
+                  if k.startswith(prefix)}
+        container = codecs.from_arrays(entry["header"], fields)
+        kw = {"kernel_impl": kernel_impl} \
+            if entry["codec"] == "cusz" and kernel_impl is not None else {}
+        out = codecs.decode(container, **kw)
+        return np.asarray(jax.device_get(out))
 
     leaves_with_path = jax.tree_util.tree_flatten_with_path(template)[0]
     treedef = jax.tree_util.tree_structure(template)

@@ -98,8 +98,9 @@ def main():
                 print(f"step {step:5d}  loss {float(loss):.4f}  "
                       f"{dt * 1e3:7.1f} ms  {tps:9.0f} tok/s")
             if args.checkpoint_dir and (step + 1) % args.checkpoint_every == 0:
-                ckpt_io.save_checkpoint(args.checkpoint_dir, step,
-                                        (params, opt), mode="cusz")
+                ckpt_io.save_checkpoint(
+                    args.checkpoint_dir, step, (params, opt),
+                    policy=ckpt_io.CheckpointPolicy(codec="cusz"))
 
 
 if __name__ == "__main__":

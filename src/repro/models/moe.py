@@ -28,32 +28,31 @@ def _qblock(d: int) -> int:
     return 0
 
 
-def _q8(x, blk):
-    """Blockwise int8 quantize along the last dim (PREQUANT, eb=scale/2)."""
-    nb = x.shape[-1] // blk
-    xf = x.astype(jnp.float32).reshape(x.shape[:-1] + (nb, blk))
-    scale = jnp.maximum(jnp.max(jnp.abs(xf), axis=-1) / 127.0, 1e-30)
-    q = jnp.clip(jnp.rint(xf / scale[..., None]), -127, 127).astype(jnp.int8)
-    return q.reshape(x.shape), scale
-
-
-def _dq8(q, scale, blk, dtype):
-    nb = scale.shape[-1]
-    xf = q.astype(jnp.float32).reshape(q.shape[:-1] + (nb, blk))
-    return (xf * scale[..., None]).reshape(q.shape).astype(dtype)
-
-
 def _compressed_reshard(x, to_spec, from_spec):
-    """Reshard with the int8 representation on the wire, both directions:
-    forward quantizes -> reshards to `to_spec` (all-to-all in s8) ->
-    dequantizes; the custom_vjp backward quantizes the cotangent and
-    reshards it back to `from_spec` in s8 (error-bounded both ways; the
-    paper's PREQUANT on the EP dispatch/combine path)."""
+    """Reshard with the armed wire codec's representation on the wire,
+    both directions: forward encodes -> reshards to `to_spec` (all-to-all
+    in s8) -> decodes; the custom_vjp backward encodes the cotangent and
+    reshards it back to `from_spec` (error-bounded both ways; the paper's
+    PREQUANT on the EP dispatch/combine path).  The codec comes from the
+    `use_a2a_compress` hook via the `repro.codecs` registry."""
+    from repro import codecs
+    from repro.dist.context import a2a_codec, constrain as _c
+
     mesh = current_mesh()
     blk = _qblock(x.shape[-1])
     if mesh is None or blk == 0:
         return constrain(x, *to_spec)
-    from repro.dist.context import constrain as _c
+    codec = codecs.get_block_codec(a2a_codec() or "int8-block",
+                                   axis=-1, block=blk)
+
+    def _enc_reshard(v, spec):
+        cont = codec.encode(v)
+        # constrain q and scale separately: the all-to-all moves the
+        # narrow payload (scale: same rank, last dim = blocks)
+        q = _c(cont.payload["q"], *spec)
+        s = _c(cont.payload["scale"], *spec)
+        return codec.decode(
+            cont.replace(payload={"q": q, "scale": s}), like=v)
 
     @jax.custom_vjp
     def reshard(v):
@@ -61,20 +60,14 @@ def _compressed_reshard(x, to_spec, from_spec):
         # v fuses the layout change into its own (f32) collective and the
         # int8 hop below becomes a no-op
         v = _c(v, *from_spec)
-        q, s = _q8(v, blk)
-        q = _c(q, *to_spec)
-        s = _c(s, *to_spec)              # scale: same rank, last dim = blocks
-        return _dq8(q, s, blk, v.dtype)
+        return _enc_reshard(v, to_spec)
 
     def fwd(v):
         return reshard(v), None
 
     def bwd(_, g):
         g = _c(g, *to_spec)
-        gq, gs = _q8(g, blk)
-        gq = _c(gq, *from_spec)
-        gs = _c(gs, *from_spec)
-        return (_dq8(gq, gs, blk, g.dtype),)
+        return (_enc_reshard(g, from_spec),)
 
     reshard.defvjp(fwd, bwd)
     return reshard(x)

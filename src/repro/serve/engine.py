@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import codecs
 from repro.models import model as M
 from repro.models.config import ModelConfig
 from repro.core import kvcache as KVC
@@ -19,6 +20,7 @@ from repro.core import kvcache as KVC
 class ServeConfig:
     s_max: int = 2048
     compressed_kv: bool = False
+    kv_codec: str = "int8-block"     # registry id of the in-memory KV codec
     temperature: float = 0.0         # 0 = greedy
     compute_dtype: object = jnp.bfloat16
 
@@ -41,13 +43,21 @@ def prefill(params, cfg: ModelConfig, tokens: jax.Array,
                 entries.append(jnp.concatenate([c, ext], axis=2))
             else:
                 k, v = c
+                kv_codec = (codecs.get_block_codec(scfg.kv_codec, axis=2,
+                                                   block=KVC.SEQ_BLOCK)
+                            if scfg.compressed_kv else None)
 
                 def extend(x):
                     ext = jnp.zeros(x.shape[:2] + (scfg.s_max - S_total,)
                                     + x.shape[3:], x.dtype)
                     full = jnp.concatenate([x, ext], axis=2)
-                    if scfg.compressed_kv:
-                        return KVC.kv_quantize(full, seq_axis=2)
+                    if kv_codec is not None:
+                        # registry codec produces the container; the
+                        # decode-step hot path keeps its payload as the
+                        # in-memory QuantKV cache format
+                        cont = kv_codec.encode(full)
+                        return KVC.QuantKV(cont.payload["q"],
+                                           cont.payload["scale"])
                     return full
                 entries.append((extend(k), extend(v)))
         else:

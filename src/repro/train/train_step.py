@@ -121,9 +121,12 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
             # (§Perf A1, refuted).
             use_params = params
 
-        wc_ctx = use_weight_compress(tcfg.weight_compress == "int8"
-                                     and on_mesh)
-        a2a_ctx = use_a2a_compress(tcfg.a2a_compress == "int8" and on_mesh)
+        # arm the hooks with the configured codec names ("int8" is the
+        # legacy alias for the blockwise wire codec; "none"/off-mesh
+        # disarms) — custom registry ids flow through unchanged
+        wc_ctx = use_weight_compress(tcfg.weight_compress if on_mesh
+                                     else False)
+        a2a_ctx = use_a2a_compress(tcfg.a2a_compress if on_mesh else False)
 
         if tcfg.grad_compress != "none" and tcfg.npods > 1:
             # spmd_axis_name pins every vmapped intermediate's lane dim to

@@ -31,8 +31,10 @@ class LoopConfig:
     seed: int = 0
     checkpoint_every: int = 50
     checkpoint_dir: Optional[str] = None
-    checkpoint_mode: str = "cusz"        # error-bounded restart files
-    checkpoint_eb: float = 1e-5
+    # error-bounded restart files: per-leaf codec selection via the
+    # repro.codecs registry (one policy object, no mode strings)
+    checkpoint_policy: ckpt_io.CheckpointPolicy = \
+        ckpt_io.CheckpointPolicy(codec="cusz", eb_valrel=1e-5)
     log_every: int = 10
 
 
@@ -77,6 +79,5 @@ class Trainer:
             if lc.checkpoint_dir and (step + 1) % lc.checkpoint_every == 0:
                 ckpt_io.save_checkpoint(lc.checkpoint_dir, step,
                                         (params, opt),
-                                        mode=lc.checkpoint_mode,
-                                        eb_valrel=lc.checkpoint_eb)
+                                        policy=lc.checkpoint_policy)
         return self.history

@@ -1,0 +1,391 @@
+"""Unified `repro.codecs` API tests: registry, container format, per-codec
+parity vs the pre-redesign entry points, dtype self-description (the bf16
+regression), checkpoint policy integration and the deprecation shims."""
+import dataclasses
+import json
+import os
+import tempfile
+import warnings
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import codecs
+from repro.core import compressor as CZ
+from repro.core import gradient as G
+from repro.core import kvcache as KV
+from repro.core import metrics as M
+from repro.core import weights as W
+from repro.core import zfp_like as Z
+from repro.io import checkpoint as CK
+
+
+def _field(shape, seed=0, smooth=True):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(shape).astype(np.float32)
+    return jnp.asarray(np.cumsum(x, axis=-1) if smooth else x)
+
+
+def _quiet(fn, *a, **k):
+    """Call a deprecated entry point with its warning suppressed."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return fn(*a, **k)
+
+
+class TestRegistry:
+    def test_names_cover_all_surfaces(self):
+        for name in ("cusz", "int8", "int16", "int8-block", "zfp",
+                     "lossless"):
+            assert name in codecs.names()
+
+    def test_get_configures(self):
+        c = codecs.get("cusz", eb=1e-3, eb_mode="valrel", chunk_size=512)
+        assert c.cfg.eb == 1e-3 and c.cfg.chunk_size == 512
+        b = codecs.get("int8-block", axis=2, block=64)
+        assert b.axis == 2 and b.block == 64
+        assert codecs.get("int16").qmax == 2 ** 15 - 1
+
+    def test_get_default_cached(self):
+        assert codecs.get("lossless") is codecs.get("lossless")
+
+    def test_unknown_codec_raises(self):
+        with pytest.raises(KeyError):
+            codecs.get("zstd")
+
+    def test_version_gate(self):
+        c = codecs.get("lossless").encode(jnp.zeros(4))
+        newer = c.replace(header=dataclasses.replace(c.header, version=99))
+        with pytest.raises(ValueError, match="v99"):
+            codecs.decode(newer)
+
+
+class TestContainer:
+    def test_header_json_roundtrip(self):
+        x = _field((6, 8))
+        c = codecs.get("cusz", eb=1e-4, eb_mode="valrel").encode(x)
+        h2 = codecs.Header.from_json(
+            json.loads(json.dumps(c.header.to_json())))
+        assert h2 == c.header          # incl. tuple-valued params (block)
+
+    def test_container_is_pytree(self):
+        c = codecs.get("int8").encode(_field((4, 4)))
+        c2 = jax.tree.map(lambda a: a, c)
+        assert isinstance(c2, codecs.Container)
+        assert c2.header == c.header
+
+    def test_to_from_arrays_npz(self):
+        x = _field((12, 16))
+        codec = codecs.get("int8-block", axis=0, block=4)
+        hjson, arrs = codecs.to_arrays(codec.pack(codec.encode(x)))
+        with tempfile.TemporaryDirectory() as d:
+            p = os.path.join(d, "c.npz")
+            np.savez(p, **arrs)
+            z = np.load(p)
+            c2 = codecs.from_arrays(hjson, {k: z[k] for k in z.files})
+            np.testing.assert_allclose(np.asarray(codecs.decode(c2)),
+                                       np.asarray(codecs.decode(
+                                           codec.encode(x))))
+
+    def test_jit_boundary(self):
+        codec = codecs.get("int8-block", axis=1, block=8)
+        x = _field((4, 32))
+        enc = jax.jit(lambda v: codec.encode(v))
+        dec = jax.jit(lambda c: codec.decode(c))
+        out = dec(enc(x))
+        np.testing.assert_array_equal(
+            np.asarray(out), np.asarray(codec.decode(codec.encode(x))))
+
+
+class TestParityWithLegacyEntryPoints:
+    """All five codecs round-trip bit-exactly through
+    codecs.get(name).encode/decode vs their pre-redesign entry points."""
+
+    def test_cusz_vs_compressor_roundtrip(self):
+        x = _field((30, 50, 20), seed=1)
+        cfg = CZ.CompressorConfig(eb=1e-4, eb_mode="valrel", chunk_size=512,
+                                  outlier_frac=1.0)
+        ref, blob, eb, _ = CZ.roundtrip(x, cfg)
+        c = codecs.get("cusz", cfg=cfg).encode(x)
+        assert c.header.param("eb") == pytest.approx(eb, rel=0, abs=0)
+        np.testing.assert_array_equal(np.asarray(codecs.decode(c)),
+                                      np.asarray(ref))
+
+    def test_cusz_packed_payload_matches_pack_blob(self):
+        x = _field((40, 64), seed=2)
+        cfg = CZ.CompressorConfig(eb=1e-4, eb_mode="valrel", chunk_size=512,
+                                  outlier_frac=1.0)
+        blob, eb = CZ.compress(x, cfg)
+        legacy = CZ.pack_blob(blob)
+        codec = codecs.get("cusz", cfg=cfg)
+        packed = codec.pack(codec.encode(x))
+        assert set(legacy) == set(packed.payload)
+        for k in legacy:
+            np.testing.assert_array_equal(np.asarray(legacy[k]),
+                                          np.asarray(packed.payload[k]))
+
+    def test_cusz_vs_gradient_blob(self):
+        g = _field((40, 130), seed=3) * 1e-3
+        cfg = CZ.CompressorConfig(eb=1e-5, eb_mode="valrel", chunk_size=512,
+                                  outlier_frac=1.0)
+        packed, eb = _quiet(G.cusz_compress_gradient, g, cfg)
+        ref = _quiet(G.cusz_decompress_gradient, packed, eb, g.shape, cfg)
+        out = codecs.decode(codecs.get("cusz", cfg=cfg).encode(g))
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+    def test_cusz_vs_kv_offload(self):
+        x = _field((4, 256, 8), seed=4)
+        cfg = CZ.CompressorConfig(eb=1e-4, eb_mode="valrel", chunk_size=512,
+                                  outlier_frac=1.0)
+        packed, eb = _quiet(KV.kv_offload_pack, x, cfg)
+        ref = _quiet(KV.kv_offload_restore, packed, eb, x.shape, cfg,
+                     dtype=jnp.float32)
+        out = codecs.decode(codecs.get("cusz", cfg=cfg).encode(x))
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+    def test_int8_vs_quantize_tensor(self):
+        g = _field((64, 32), seed=5, smooth=False)
+        q, scale = G.quantize_tensor(g, "int8")
+        ref = G.dequantize_tensor(q, scale)
+        c = codecs.get("int8").encode(g)
+        np.testing.assert_array_equal(np.asarray(c.payload["q"]),
+                                      np.asarray(q))
+        np.testing.assert_array_equal(np.asarray(codecs.decode(c)),
+                                      np.asarray(ref))
+
+    def test_int8_block_vs_kv_quantize(self):
+        x = _field((2, 4, 512, 16), seed=6, smooth=False)
+        qkv = KV.kv_quantize(x, seq_axis=2)
+        c = codecs.get("int8-block", axis=2, block=KV.SEQ_BLOCK).encode(x)
+        np.testing.assert_array_equal(np.asarray(c.payload["q"]),
+                                      np.asarray(qkv.q))
+        np.testing.assert_array_equal(np.asarray(c.payload["scale"]),
+                                      np.asarray(qkv.scale))
+        np.testing.assert_array_equal(
+            np.asarray(codecs.decode(c, like=x)),
+            np.asarray(KV.kv_dequantize(qkv, 2, jnp.float32)))
+
+    def test_int8_block_vs_weights_qdq(self):
+        x = _field((16, 256), seed=7, smooth=False)
+        ref = W._qdq(x)
+        c = codecs.get("int8-block", axis=-1, block=W.QBLOCK).encode(x)
+        np.testing.assert_array_equal(np.asarray(codecs.decode(c)),
+                                      np.asarray(ref))
+
+    @pytest.mark.parametrize("shape", [(64, 80), (30, 40, 20),
+                                       (3, 9, 10, 11)])
+    def test_zfp_vs_compress_decompress(self, shape):
+        x = _field(shape, seed=8)
+        ref, rate = Z.compress_decompress(x, 12)
+        codec = codecs.get("zfp", rate_bits=12)
+        c = codec.encode(x)
+        np.testing.assert_array_equal(np.asarray(codecs.decode(c)),
+                                      np.asarray(ref))
+        assert codec.achieved_bitrate(c) == pytest.approx(rate)
+
+    def test_lossless_exact(self):
+        x = _field((5, 7), seed=9)
+        np.testing.assert_array_equal(
+            np.asarray(codecs.decode(codecs.get("lossless").encode(x))),
+            np.asarray(x))
+
+
+class TestSelfDescribingContainer:
+    """A Container alone (no caller-side eb/shape/dtype) suffices to
+    decode — including the bf16 regression the old `(packed, eb)` + shape
+    plumbing lost (restore hardcoded the caller's dtype)."""
+
+    @pytest.mark.parametrize("name,kw", [
+        ("cusz", {"eb": 1e-3, "eb_mode": "valrel"}),
+        ("int8", {}),
+        ("int8-block", {"axis": 1, "block": 128}),
+        ("lossless", {}),
+    ])
+    def test_bf16_dtype_restored(self, name, kw):
+        x32 = _field((6, 256), seed=10)
+        x = x32.astype(jnp.bfloat16)
+        codec = codecs.get(name, **kw)
+        c = codec.encode(x)
+        assert c.header.dtype == "bfloat16"
+        assert c.header.shape == (6, 256)
+        y = codecs.decode(c)               # no dtype passed anywhere
+        assert y.dtype == jnp.bfloat16 and y.shape == x.shape
+        if name != "lossless":
+            rel = float(jnp.max(jnp.abs(
+                y.astype(jnp.float32) - x.astype(jnp.float32))))
+            amax = float(jnp.max(jnp.abs(x32)))
+            assert rel <= amax * 0.05      # bf16 + codec bound, loose
+        else:
+            np.testing.assert_array_equal(np.asarray(y, np.float32),
+                                          np.asarray(x, np.float32))
+
+    def test_cusz_storage_roundtrip_container_only(self):
+        """encode -> pack -> npz -> from_arrays -> decode, nothing else."""
+        x = _field((25, 40, 16), seed=11)
+        codec = codecs.get("cusz", eb=1e-4, eb_mode="valrel", chunk_size=512,
+                           outlier_frac=1.0)
+        hjson, arrs = codecs.to_arrays(codec.pack(codec.encode(x)))
+        with tempfile.TemporaryDirectory() as d:
+            p = os.path.join(d, "c.npz")
+            np.savez(p, **arrs)
+            z = np.load(p)
+            c = codecs.from_arrays(hjson, {k: z[k] for k in z.files})
+        y = codecs.decode(c)
+        assert y.shape == x.shape and y.dtype == x.dtype
+        eb = c.header.param("eb")
+        assert M.verify_error_bound(x, y, eb)
+
+    def test_decode_honors_like_override(self):
+        x = _field((4, 128))
+        c = codecs.get("int8-block").encode(x)
+        out = codecs.get("int8-block").decode(
+            c, like=jax.ShapeDtypeStruct((4, 128), jnp.float16))
+        assert out.dtype == jnp.float16
+
+    def test_cusz_valid_flags_outlier_overflow(self):
+        # tiny outlier capacity + rough data -> overflow -> invalid
+        rng = np.random.default_rng(12)
+        x = jnp.asarray(rng.standard_normal((64, 64)).astype(np.float32))
+        codec = codecs.get("cusz", eb=1e-6, eb_mode="valrel",
+                           outlier_frac=0.001)
+        c = codec.encode(x)
+        assert not codec.valid(c)
+        smooth = _field((64, 64), seed=13)
+        ok = codecs.get("cusz", eb=1e-3, eb_mode="valrel", outlier_frac=1.0)
+        assert ok.valid(ok.encode(smooth))
+
+
+class TestDeprecationShims:
+    def test_cusz_gradient_shims_warn_and_work(self):
+        g = _field((40, 130), seed=14) * 1e-3
+        cfg = CZ.CompressorConfig(eb=1e-5, eb_mode="valrel", chunk_size=512,
+                                  outlier_frac=1.0)
+        with pytest.warns(DeprecationWarning):
+            packed, eb = G.cusz_compress_gradient(g, cfg)
+        with pytest.warns(DeprecationWarning):
+            out = G.cusz_decompress_gradient(packed, eb, g.shape, cfg)
+        assert M.verify_error_bound(g, out, eb)
+
+    def test_kv_offload_shims_warn_and_work(self):
+        x = _field((4, 256, 8), seed=15)
+        cfg = CZ.CompressorConfig(eb=1e-4, eb_mode="valrel", chunk_size=512,
+                                  outlier_frac=1.0)
+        with pytest.warns(DeprecationWarning):
+            packed, eb = KV.kv_offload_pack(x, cfg)
+        with pytest.warns(DeprecationWarning):
+            out = KV.kv_offload_restore(packed, eb, x.shape, cfg,
+                                        dtype=jnp.float32)
+        assert float(jnp.max(jnp.abs(out - x))) <= eb * (1 + 1e-4) + 1e-9
+
+    def test_save_checkpoint_mode_warns_and_works(self):
+        rng = np.random.default_rng(16)
+        tree = {"w": jnp.asarray(np.cumsum(
+            rng.standard_normal((64, 128)), axis=-1).astype(np.float32))}
+        with tempfile.TemporaryDirectory() as d:
+            with pytest.warns(DeprecationWarning):
+                CK.save_checkpoint(d, 1, tree, mode="cusz", eb_valrel=1e-4)
+            out, step = CK.load_checkpoint(d, tree)
+        assert step == 1
+        w, w2 = np.asarray(tree["w"]), np.asarray(out["w"])
+        assert np.abs(w - w2).max() <= 1.05e-4 * (w.max() - w.min())
+
+    def test_checkpoint_codec_config_warns(self):
+        with pytest.warns(DeprecationWarning):
+            cfg = W.checkpoint_codec_config(1e-5, kernel_impl="jax")
+        assert cfg.eb_mode == "valrel" and cfg.use_tpu_blocks
+
+
+class TestConsumersThroughRegistry:
+    def test_serve_engine_kv_codec(self):
+        """ServeConfig.compressed_kv builds the cache via the registered
+        kv codec; greedy generation still mostly agrees."""
+        from repro import configs
+        from repro.models import model as MM
+        from repro.serve.engine import ServeConfig, generate
+        cfg = configs.reduced("qwen3-4b", n_periods=1)
+        params = MM.init_params(jax.random.PRNGKey(6), cfg)
+        prompt = jnp.zeros((2, 8), jnp.int32)
+        a = np.asarray(generate(params, cfg, prompt, 6,
+                                ServeConfig(s_max=128)))
+        b = np.asarray(generate(params, cfg, prompt, 6,
+                                ServeConfig(s_max=128, compressed_kv=True,
+                                            kv_codec="int8-block")))
+        assert (a == b).mean() > 0.6
+
+    def test_gradient_psum_uses_registry_codec(self):
+        rng = np.random.default_rng(17)
+        npods = 2
+        g = rng.standard_normal((npods, 64, 32)).astype(np.float32) * 0.01
+        out = G.compressed_psum_mean({"w": jnp.asarray(g)}, "int8",
+                                     npods)["w"]
+        ref = g.mean(axis=0)
+        qmax = codecs.get("int8").qmax
+        scale = np.abs(g).max() / (qmax // npods)
+        assert np.abs(np.asarray(out) - ref).max() <= scale / 2 + 1e-12
+
+    def test_checkpoint_kernel_impl_via_policy(self):
+        rng = np.random.default_rng(18)
+        tree = {"w": jnp.asarray(np.cumsum(
+            rng.standard_normal((64, 128)), axis=-1).astype(np.float32))}
+        pol = CK.CheckpointPolicy(codec="cusz", eb_valrel=1e-4,
+                                  kernel_impl="pallas-interpret")
+        with tempfile.TemporaryDirectory() as d:
+            CK.save_checkpoint(d, 0, tree, policy=pol)
+            out, _ = CK.load_checkpoint(d, tree,
+                                        kernel_impl="pallas-interpret")
+        w, w2 = np.asarray(tree["w"]), np.asarray(out["w"])
+        assert np.abs(w - w2).max() <= 1.05e-4 * (w.max() - w.min())
+
+    def test_a2a_hook_carries_codec_name(self):
+        from repro.dist import context as ctx
+        from repro.launch.mesh import make_host_mesh
+        with ctx.use_mesh(make_host_mesh()):
+            assert ctx.a2a_codec() is None
+            with ctx.use_a2a_compress(True):
+                assert ctx.a2a_codec() == "int8-block"
+            with ctx.use_a2a_compress("int8"):
+                # legacy mode string = the blockwise wire codec
+                assert ctx.a2a_codec() == "int8-block"
+            with ctx.use_a2a_compress("none"):
+                assert ctx.a2a_codec() is None
+        assert ctx.weight_compress_codec() is None
+        with ctx.use_weight_compress(True):
+            assert ctx.weight_compress_codec() == "int8-block"
+        with pytest.raises(ValueError, match="unknown compression codec"):
+            ctx.use_weight_compress("int08")
+
+    def test_block_codec_lookup_rejects_non_blockwise(self):
+        assert codecs.get_block_codec("int8-block", axis=2,
+                                      block=64).block == 64
+        with pytest.raises(ValueError, match="blockwise"):
+            codecs.get_block_codec("cusz", axis=2, block=64)
+        with pytest.raises(ValueError, match="blockwise"):
+            codecs.get_block_codec("int8", axis=2, block=64)
+
+    def test_checkpoint_block_misaligned_leaf_falls_back(self):
+        """A rule routing a block-misaligned leaf to int8-block must fall
+        back to lossless, not abort the save."""
+        rng = np.random.default_rng(19)
+        tree = {"odd": jnp.asarray(
+            rng.standard_normal((100, 70)).astype(np.float32))}
+        pol = CK.CheckpointPolicy(rules=(("odd", "int8-block"),))
+        with tempfile.TemporaryDirectory() as d:
+            final = CK.save_checkpoint(d, 0, tree, policy=pol)
+            man = json.load(open(os.path.join(final, "manifest.json")))
+            assert man["tensors"]["odd"]["codec"] == "lossless"
+            out, _ = CK.load_checkpoint(d, tree)
+        np.testing.assert_array_equal(np.asarray(out["odd"]),
+                                      np.asarray(tree["odd"]))
+
+    def test_load_rejects_unknown_manifest_format(self):
+        tree = {"w": jnp.zeros((4,), jnp.float32)}
+        with tempfile.TemporaryDirectory() as d:
+            final = CK.save_checkpoint(d, 0, tree)
+            p = os.path.join(final, "manifest.json")
+            man = json.load(open(p))
+            man.pop("format")                  # simulate a format-1 file
+            json.dump(man, open(p, "w"))
+            with pytest.raises(ValueError, match="format 1"):
+                CK.load_checkpoint(d, tree)

@@ -82,7 +82,7 @@ class TestCheckpoint:
     def test_lossless_roundtrip_exact(self):
         state = self._state()
         with tempfile.TemporaryDirectory() as d:
-            CK.save_checkpoint(d, 3, state, mode="lossless")
+            CK.save_checkpoint(d, 3, state)       # default policy: lossless
             out, step = CK.load_checkpoint(d, state)
             assert step == 3
             for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(out)):
@@ -91,7 +91,9 @@ class TestCheckpoint:
     def test_cusz_roundtrip_bounded(self):
         state = self._state()
         with tempfile.TemporaryDirectory() as d:
-            CK.save_checkpoint(d, 0, state, mode="cusz", eb_valrel=1e-5)
+            CK.save_checkpoint(d, 0, state,
+                               policy=CK.CheckpointPolicy(codec="cusz",
+                                                          eb_valrel=1e-5))
             out, _ = CK.load_checkpoint(d, state)
             for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(out)):
                 a, b = np.asarray(a), np.asarray(b)
@@ -99,6 +101,42 @@ class TestCheckpoint:
                     rng = a.max() - a.min()
                     if rng > 0:
                         assert np.abs(a - b).max() <= 1.05e-5 * rng + 1e-12
+
+    def test_policy_rules_route_leaves_to_codecs(self):
+        """Per-leaf codec selection from one config: a substring rule
+        sends the `opt` subtree through int8 while params stay cusz and
+        ineligible leaves (small / int) fall back to lossless."""
+        import json
+        rng = np.random.default_rng(0)
+        tree = {
+            "w": jnp.asarray(np.cumsum(rng.standard_normal((64, 128)),
+                                       axis=-1).astype(np.float32)),
+            "bias": jnp.asarray(rng.standard_normal(8).astype(np.float32)),
+            "step": jnp.asarray(np.int32(7)),
+            "opt": {"m": jnp.asarray(
+                rng.standard_normal((64, 128)).astype(np.float32))},
+        }
+        pol = CK.CheckpointPolicy(codec="cusz", eb_valrel=1e-4,
+                                  rules=(("opt", "int8"),))
+        with tempfile.TemporaryDirectory() as d:
+            final = CK.save_checkpoint(d, 0, tree, policy=pol)
+            man = json.load(open(os.path.join(final, "manifest.json")))
+            assert man["tensors"]["w"]["codec"] == "cusz"
+            assert man["tensors"]["opt::m"]["codec"] == "int8"
+            assert man["tensors"]["bias"]["codec"] == "lossless"  # too small
+            assert man["tensors"]["step"]["codec"] == "lossless"  # not float
+            for e in man["tensors"].values():      # self-describing headers
+                assert e["header"]["codec"] == e["codec"]
+                assert "dtype" in e["header"] and "shape" in e["header"]
+            out, _ = CK.load_checkpoint(d, tree)
+        np.testing.assert_array_equal(np.asarray(out["step"]),
+                                      np.asarray(tree["step"]))
+        np.testing.assert_array_equal(np.asarray(out["bias"]),
+                                      np.asarray(tree["bias"]))
+        w, w2 = np.asarray(tree["w"]), np.asarray(out["w"])
+        assert np.abs(w - w2).max() <= 1.05e-4 * (w.max() - w.min())
+        m, m2 = np.asarray(tree["opt"]["m"]), np.asarray(out["opt"]["m"])
+        assert np.abs(m - m2).max() <= np.abs(m).max() / 127.0 * 0.51
 
     def test_latest_step_and_overwrite(self):
         state = self._state()
