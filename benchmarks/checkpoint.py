@@ -1,0 +1,102 @@
+"""Checkpoint write-path wall time: sync vs async vs sharded, per codec.
+
+For each checkpoint codec policy (lossless / cusz / int8) and each write
+mode, measures:
+
+  * ``blocked_s``  — time the step loop is stalled by the save call
+                     (sync: the whole save; async: encode + submit only)
+  * ``total_s``    — time until the step directory is durably committed
+                     (async: includes the writer-thread drain)
+
+so the async win is visible as blocked_s << total_s, and the sharded
+win as smaller per-file writes.  Writes ``BENCH_checkpoint.json``
+records ``{mode, codec, nshards, blocked_s, total_s, MBps, bytes}``.
+"""
+from __future__ import annotations
+
+import glob
+import os
+import shutil
+import tempfile
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.io import checkpoint as CK
+from repro.io.async_writer import AsyncWriter
+from .common import emit, write_json
+
+JSON_NAME = "BENCH_checkpoint.json"
+
+CODECS = ("lossless", "cusz", "int8")
+MODES = (("sync", 1), ("async", 1), ("sharded-sync", 4), ("sharded-async", 4))
+
+
+def _state(small: bool):
+    """A checkpoint-shaped tree: a few compressible (smooth) weight-like
+    leaves plus small raw leaves (bias / step counter)."""
+    rng = np.random.default_rng(0)
+    n = 64 if small else 512
+    tree = {"step": jnp.asarray(np.int32(7)),
+            "bias": jnp.asarray(rng.standard_normal(64).astype(np.float32))}
+    for i in range(4):
+        w = np.cumsum(rng.standard_normal((n, 1024)), axis=-1)
+        tree[f"w{i}"] = jnp.asarray(w.astype(np.float32))
+    return tree
+
+
+def _policy(codec: str) -> CK.CheckpointPolicy:
+    if codec == "cusz":
+        return CK.CheckpointPolicy(codec="cusz", eb_valrel=1e-4)
+    return CK.CheckpointPolicy(codec=codec)
+
+
+def _dir_bytes(d: str) -> int:
+    return sum(os.path.getsize(p) for p in glob.glob(os.path.join(d, "*")))
+
+
+def main(small: bool = False, json_dir: str = ".") -> None:
+    tree = _state(small)
+    raw = sum(int(v.size) * v.dtype.itemsize for v in tree.values())
+    records = []
+    base = tempfile.mkdtemp(prefix="repro_bench_ckpt_")
+    try:
+        for codec in CODECS:
+            policy = _policy(codec)
+            for mode, nshards in MODES:
+                d = os.path.join(base, f"{codec}_{mode}")
+                os.makedirs(d, exist_ok=True)
+                use_async = mode.endswith("async")
+                writer = AsyncWriter(max_pending=1) if use_async else None
+                # warmup save (jit compiles), then the timed one
+                CK.save_checkpoint(d, 0, tree, policy=policy,
+                                   nshards=nshards, writer=writer)
+                if writer is not None:
+                    writer.wait()
+                t0 = time.perf_counter()
+                CK.save_checkpoint(d, 1, tree, policy=policy,
+                                   nshards=nshards, writer=writer)
+                blocked = time.perf_counter() - t0
+                if writer is not None:
+                    writer.wait()
+                total = time.perf_counter() - t0
+                stored = _dir_bytes(os.path.join(d, "step_00000001"))
+                rec = {"mode": mode, "codec": codec, "nshards": nshards,
+                       "blocked_s": round(blocked, 6),
+                       "total_s": round(total, 6),
+                       "MBps": round(raw / total / 1e6, 2),
+                       "bytes": stored}
+                records.append(rec)
+                emit(f"ckpt_{codec}_{mode}", total,
+                     f"blocked_ms={blocked * 1e3:.2f};"
+                     f"MBps={rec['MBps']};ratio={raw / max(1, stored):.2f}")
+                if writer is not None:
+                    writer.close()
+    finally:
+        shutil.rmtree(base, ignore_errors=True)
+    write_json(os.path.join(json_dir, JSON_NAME), records)
+
+
+if __name__ == "__main__":
+    main()

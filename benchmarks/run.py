@@ -8,6 +8,8 @@ seconds, GBps}).
   Table 5/8-> quality             Table 6  -> chunksize
   Table 7  -> throughput          Figs 6-8 -> rate_distortion
   beyond   -> grad_compression    §Roofline-> roofline (from dry-run JSONs)
+  beyond   -> checkpoint (sync/async/sharded write path per codec)
+  beyond   -> serve_latency (compressed-KV decode per token)
 
 CLI:
   --only MOD[,MOD]   run a subset (e.g. --only throughput)
@@ -22,8 +24,9 @@ import inspect
 import sys
 import traceback
 
-from . import (chunksize, codebook, grad_compression, huffman_repr, quality,
-               rate_distortion, roofline, throughput)
+from . import (checkpoint, chunksize, codebook, grad_compression,
+               huffman_repr, quality, rate_distortion, roofline,
+               serve_latency, throughput)
 
 MODULES = [
     ("codebook", codebook),
@@ -33,6 +36,8 @@ MODULES = [
     ("throughput", throughput),
     ("rate_distortion", rate_distortion),
     ("grad_compression", grad_compression),
+    ("checkpoint", checkpoint),
+    ("serve_latency", serve_latency),
     ("roofline", roofline),
 ]
 

@@ -1,0 +1,92 @@
+"""Compressed-KV decode latency per token (the serve-path latency leg
+the PR-3 quality sweep left open).
+
+Two measurement levels:
+
+  * ``engine``  — a real jitted one-token decode step through the serve
+    engine, uncompressed KV vs. each blockwise KV codec
+    (`ServeConfig.kv_codec` registry ids), so the number includes the
+    in-attention dequant on the hot path.
+  * ``dequant`` — the isolated blockwise dequantize of one layer's K/V
+    buffers across scale-block sizes, which is the per-token marginal
+    cost the cache codec adds.
+
+Writes ``BENCH_serve_latency.json`` records
+``{path, codec, block, us_per_token}``.  CPU numbers are relative
+signals between codec variants (DESIGN.md §9).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import codecs, configs
+from repro.core import kvcache as KVC
+from repro.models import model as M
+from repro.serve.engine import ServeConfig, make_serve_step, prefill
+from .common import emit, timeit, write_json
+
+JSON_NAME = "BENCH_serve_latency.json"
+
+# every registry codec that quantizes blockwise along one axis is a
+# valid in-memory KV format; non-blockwise ids are rejected by
+# get_block_codec, so this list is the sweepable axis
+BLOCK_CODECS = ("int8-block",)
+
+
+def _engine_records(small: bool, records: list) -> None:
+    cfg = configs.reduced("qwen2.5-3b", n_periods=1)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    B, plen, n_new = (2, 8, 4) if small else (4, 32, 16)
+    s_max = 128 if small else 512
+    prompt = jnp.zeros((B, plen), jnp.int32)
+    for codec in (None,) + BLOCK_CODECS:
+        scfg = ServeConfig(s_max=s_max, compressed_kv=codec is not None,
+                           kv_codec=codec or "int8-block")
+        step = jax.jit(make_serve_step(cfg, scfg))
+        last, caches, pl = prefill(params, cfg, prompt, scfg)
+        tok = jnp.argmax(last, axis=-1).astype(jnp.int32)[:, None]
+
+        def decode_tokens(tok, caches):
+            for i in range(n_new):
+                logits, caches = step(params, tok, caches, jnp.int32(pl + i))
+                tok = jnp.argmax(logits[:, 0, :], axis=-1
+                                 ).astype(jnp.int32)[:, None]
+            return tok
+
+        t = timeit(decode_tokens, tok, caches) / n_new
+        name = codec or "none"
+        records.append({"path": "engine", "codec": name,
+                        "block": KVC.SEQ_BLOCK if codec else 0,
+                        "us_per_token": round(t * 1e6, 2)})
+        emit(f"serve_decode_{name}", t, f"us_per_token={t * 1e6:.1f}")
+
+
+def _dequant_records(small: bool, records: list) -> None:
+    B, H, S, hd = (2, 4, 512, 32) if small else (4, 8, 4096, 64)
+    rng = np.random.default_rng(0)
+    kv = jnp.asarray(rng.standard_normal((B, H, S, hd)).astype(np.float32))
+    for name in BLOCK_CODECS:
+        for block in (64, 128, 256):
+            codec = codecs.get_block_codec(name, axis=2, block=block)
+            cont = codec.encode(kv)
+            dec = jax.jit(lambda c: codec.decode(c))
+            t = timeit(dec, cont) / S           # amortized per cached token
+            records.append({"path": "dequant", "codec": name, "block": block,
+                            "us_per_token": round(t * 1e6, 3)})
+            emit(f"kv_dequant_{name}_b{block}", t,
+                 f"us_per_token={t * 1e6:.2f}")
+
+
+def main(small: bool = False, json_dir: str = ".") -> None:
+    records: list = []
+    _engine_records(small, records)
+    _dequant_records(small, records)
+    write_json(os.path.join(json_dir, JSON_NAME), records)
+
+
+if __name__ == "__main__":
+    main()

@@ -24,7 +24,8 @@ and `to_arrays`/`from_arrays` bridge to npz-style field dicts.
 from .base import (Codec, decode, get, get_block_codec,  # noqa: F401
                    names, register)
 from .container import (CONTAINER_FORMAT, Container, Header,  # noqa: F401
-                        from_arrays, make_header, to_arrays)
+                        concat_containers, from_arrays, make_header,
+                        to_arrays)
 
 # importing the implementation modules populates the registry
 from . import cusz as cusz            # noqa: F401
@@ -34,5 +35,5 @@ from . import zfp as zfp              # noqa: F401
 
 __all__ = ["Codec", "Container", "Header", "CONTAINER_FORMAT",
            "decode", "get", "get_block_codec", "names", "register",
-           "to_arrays", "from_arrays", "make_header",
+           "to_arrays", "from_arrays", "make_header", "concat_containers",
            "cusz", "int8", "lossless", "zfp"]

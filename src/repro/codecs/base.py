@@ -80,6 +80,41 @@ class Codec:
         Codecs with capacity limits override (cuSZ: outlier overflow)."""
         return True
 
+    # -- sharded encode (the per-host checkpoint write path) ----------------
+    #
+    # A codec is *split-stable* along an axis when encoding each slice
+    # independently decodes to exactly what encoding the whole tensor
+    # would — so a sharded save is bit-identical to a single-file save.
+    # Elementwise codecs (lossless, int8 with a pinned global scale,
+    # int8-block with block-aligned splits) qualify; chunked-transform
+    # codecs (cusz, zfp: prediction/blocking crosses slice boundaries)
+    # do not and return None, which makes the checkpoint planner assign
+    # the whole leaf to one owner shard instead of splitting it.
+
+    def shard_axis(self, shape, nshards: int):
+        """Axis to split a `shape` tensor over `nshards` hosts, or None
+        when this codec cannot split it without changing the decode."""
+        return None
+
+    def encode_parts(self, x, axis: int, nshards: int):
+        """Encode `x` as `nshards` independent slice containers along
+        `axis`.  Must be bit-equivalent to `encode(x)` on decode; codecs
+        with cross-slice state (per-tensor scales) override to pin it."""
+        step = x.shape[axis] // nshards
+        idx = [slice(None)] * x.ndim
+        parts = []
+        for h in range(nshards):
+            idx[axis] = slice(h * step, (h + 1) * step)
+            parts.append(self.encode(x[tuple(idx)]))
+        return parts
+
+    def payload_axes(self, axis: int):
+        """Per-field concat axis for reassembling slice containers along
+        source `axis` in payload space (`container.concat_containers`),
+        or None when payload-space merge is unsupported — the loader
+        then decodes each part and concatenates values."""
+        return None
+
 
 # ---------------------------------------------------------------------------
 # Registry

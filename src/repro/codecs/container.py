@@ -57,10 +57,13 @@ class Header:
         return default
 
     def with_params(self, **kw) -> "Header":
-        """Return a header with `kw` merged into params (replace on key)."""
+        """Return a header with `kw` merged into params (replace on key).
+        Params stay key-sorted — the canonical order `make_header` and
+        `from_json` produce — so header equality (and the jit cache key)
+        never depends on merge order."""
         items = [(k, v) for k, v in self.params if k not in kw]
-        items += [(k, _freeze(v)) for k, v in sorted(kw.items())]
-        return dataclasses.replace(self, params=tuple(items))
+        items += [(k, _freeze(v)) for k, v in kw.items()]
+        return dataclasses.replace(self, params=tuple(sorted(items)))
 
     def to_json(self) -> Dict[str, Any]:
         return {"format": CONTAINER_FORMAT, "codec": self.codec,
@@ -124,6 +127,39 @@ class Container:
         return (f"Container(codec={h.codec!r}, v{h.version}, "
                 f"dtype={h.dtype}, shape={h.shape}, "
                 f"fields={sorted(self.payload)})")
+
+
+# ---------------------------------------------------------------------------
+# Shard reassembly (payload-space concatenation)
+# ---------------------------------------------------------------------------
+
+def concat_containers(parts, axis: int, field_axes: Mapping[str, Any]
+                      ) -> Container:
+    """Merge axis-sharded containers of one codec into a single container
+    without decoding: each payload field is concatenated along the axis
+    `field_axes` maps it to (None = shared/replicated field, taken from
+    the first part).  Headers must agree except for ``shape[axis]``; the
+    merged header sums that dim.  This is the elastic-restore wire path:
+    what moves between hosts is the codec's compressed payload, never the
+    decoded array."""
+    h0 = parts[0].header
+    for p in parts[1:]:
+        if p.header.codec != h0.codec or p.header.params != h0.params:
+            raise ValueError(f"cannot concat containers with differing "
+                             f"codec/params: {p.header} vs {h0}")
+    shape = list(h0.shape)
+    shape[axis] = sum(int(p.header.shape[axis]) for p in parts)
+    payload: Dict[str, Any] = {}
+    for field, fa in field_axes.items():
+        vals = [p.payload[field] for p in parts]
+        if fa is None:
+            payload[field] = vals[0]
+        elif all(isinstance(v, np.ndarray) for v in vals):
+            payload[field] = np.concatenate(vals, axis=fa)
+        else:
+            payload[field] = jax.numpy.concatenate(
+                [jax.numpy.asarray(v) for v in vals], axis=fa)
+    return Container(dataclasses.replace(h0, shape=tuple(shape)), payload)
 
 
 # ---------------------------------------------------------------------------

@@ -119,6 +119,31 @@ class Int8Codec(Codec):
         y = dequantize(c.payload["q"], c.payload["scale"])
         return self._finish(y, c.header, like)
 
+    # -- sharded encode: split-stable because the scale is pinned globally
+    def shard_axis(self, shape, nshards: int):
+        from repro.dist.sharding import even_shard_axis
+        return even_shard_axis(shape, nshards)
+
+    def encode_parts(self, x, axis: int, nshards: int):
+        """Per-slice containers that decode bit-identically to a whole-
+        tensor encode: the per-tensor scale is derived once from the full
+        tensor and pinned for every slice (each part stores a copy)."""
+        xf = jnp.asarray(x).astype(jnp.float32)
+        scale = jnp.maximum(jnp.max(jnp.abs(xf)) / float(self.qmax), 1e-30)
+        step = x.shape[axis] // nshards
+        idx = [slice(None)] * x.ndim
+        parts = []
+        for h in range(nshards):
+            idx[axis] = slice(h * step, (h + 1) * step)
+            sl = jnp.asarray(x)[tuple(idx)]
+            q, _ = quantize(sl, float(self.qmax), self.qdtype, scale=scale)
+            parts.append(Container(self._header(sl, bits=self.bits),
+                                   {"q": q, "scale": scale}))
+        return parts
+
+    def payload_axes(self, axis: int):
+        return {"q": axis, "scale": None}       # scale is the shared pin
+
 
 @dataclasses.dataclass(frozen=True)
 class BlockInt8Codec(Codec):
@@ -142,6 +167,26 @@ class BlockInt8Codec(Codec):
                              int(c.header.param("axis")),
                              int(c.header.param("block")))
         return self._finish(y, c.header, like)
+
+    # -- sharded encode: split-stable as long as no scale block straddles
+    # a slice boundary (block amaxes are local to each slice then)
+    def shard_axis(self, shape, nshards: int):
+        from repro.dist.sharding import even_shard_axis
+        qaxis = self.axis % len(shape) if shape else None
+        if qaxis is None or int(shape[qaxis]) % self.block != 0:
+            return None                  # whole-tensor encode would assert
+        best = None
+        for i, s in enumerate(shape):
+            aligned = self.block if i == qaxis else 1
+            if even_shard_axis((s,), nshards, multiple_of=aligned) == 0:
+                if best is None or int(s) > int(shape[best]):
+                    best = i
+        return best
+
+    def payload_axes(self, axis: int):
+        # scale mirrors the source rank (quantized axis shrunk /block),
+        # so the concat axis index is the same for both fields
+        return {"q": axis, "scale": axis}
 
 
 register("int8", lambda **kw: Int8Codec(bits=8, **kw))

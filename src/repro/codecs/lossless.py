@@ -50,5 +50,13 @@ class LosslessCodec(Codec):
         return Container(c.header.with_params(packed=False),
                          {"data": jnp.asarray(arr)})
 
+    # -- sharded encode: identity is trivially split-stable
+    def shard_axis(self, shape, nshards: int):
+        from repro.dist.sharding import even_shard_axis
+        return even_shard_axis(shape, nshards)
+
+    def payload_axes(self, axis: int):
+        return {"data": axis}
+
 
 register("lossless", lambda **kw: LosslessCodec(**kw))

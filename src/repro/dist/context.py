@@ -39,6 +39,7 @@ _spec_stack: List[Any] = []
 _dp_override_stack: List[Tuple[str, ...]] = []
 _weight_compress_stack: List[Optional[str]] = []   # armed codec names
 _a2a_compress_stack: List[Optional[str]] = []
+_restore_compress_stack: List[Optional[str]] = []
 
 
 def _is_spec(x) -> bool:
@@ -210,6 +211,28 @@ def weight_compress_codec() -> Optional[str]:
     if not (_weight_compress_stack and _weight_compress_stack[-1]):
         return None
     return _weight_compress_stack[-1]
+
+
+def use_restore_compress(active):
+    """Arm the elastic-restore wire codec: during ``load_checkpoint``,
+    raw (lossless-stored) float leaves are re-encoded through this
+    blockwise codec for the host->device reshard move, the same
+    s8-on-the-wire trick the MoE all-to-all uses.  Lossy (eb = scale/2);
+    stored-compressed leaves already move as containers and are never
+    re-encoded.  `active`: bool or a codec registry name."""
+    name = _codec_name(active)
+    if name is not None:
+        # arm-time validation, matching the serve/a2a hooks: a
+        # non-blockwise id must fail here, not mid-restore
+        from repro import codecs
+        codecs.get_block_codec(name, axis=0, block=8)
+    return _pushed(_restore_compress_stack, name)
+
+
+def restore_codec() -> Optional[str]:
+    """Registry name of the armed elastic-restore wire codec (None = off,
+    the default: restore is bit-exact w.r.t. the stored containers)."""
+    return _restore_compress_stack[-1] if _restore_compress_stack else None
 
 
 def _drop_lead(spec: P) -> P:

@@ -118,6 +118,22 @@ def param_shardings(tree: Any, mesh, *, fsdp: bool = False) -> Any:
                                   is_leaf=_is_spec)
 
 
+def even_shard_axis(shape: Sequence[int], nshards: int,
+                    multiple_of: int = 1) -> Optional[int]:
+    """Largest dim splittable into `nshards` equal slices whose lengths
+    stay a multiple of `multiple_of` (codec block alignment), or None.
+    The per-host checkpoint writer uses this to plan tensor splits."""
+    if nshards <= 1:
+        return None
+    best = None
+    for i, s in enumerate(shape):
+        s = int(s)
+        if s % nshards == 0 and (s // nshards) % multiple_of == 0 and s > 0:
+            if best is None or s > int(shape[best]):
+                best = i
+    return best
+
+
 def dp_axes(mesh) -> Tuple[str, ...]:
     """Mesh axes that carry data parallelism for the batch dim."""
     return tuple(a for a in ("pod", "data") if a in dict(mesh.shape))

@@ -1,1 +1,1 @@
-from . import checkpoint  # noqa: F401
+from . import async_writer, checkpoint  # noqa: F401

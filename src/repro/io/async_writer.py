@@ -1,0 +1,113 @@
+"""Bounded async write worker for the checkpoint pipeline.
+
+The old ``save_checkpoint(background=True)`` fired a daemon thread that
+was never joined and whose exceptions evaporated with the thread — a
+failed write silently *lost the checkpoint*.  `AsyncWriter` is the real
+version of that idea:
+
+  * one worker thread drains a bounded queue of write closures;
+  * ``submit`` blocks when the queue is full — this is the natural
+    back-pressure barrier the trainer relies on when the writer falls
+    behind the step loop;
+  * the first exception a task raises is captured and re-raised (same
+    exception object) at the next ``submit``/``wait``/``close`` call, so
+    a failed checkpoint write surfaces in the training loop instead of
+    vanishing;
+  * ``wait`` joins every pending task (the pre-shutdown / pre-restore
+    barrier).
+
+Thread-safety note: tasks run JAX host transfers (``device_get``) and
+numpy I/O; both are safe off the main thread, and the single worker
+serializes writes so shard files of step N never interleave with step
+N+1.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Callable, Optional
+
+_SENTINEL = object()
+
+
+class AsyncWriter:
+    """One worker thread + bounded task queue with exception re-raise."""
+
+    def __init__(self, max_pending: int = 2, name: str = "ckpt-writer"):
+        assert max_pending >= 1, max_pending
+        self._q: "queue.Queue[Any]" = queue.Queue(maxsize=max_pending)
+        self._err: Optional[BaseException] = None
+        self._err_lock = threading.Lock()
+        self._closed = False
+        self._thread = threading.Thread(target=self._worker, name=name,
+                                        daemon=True)
+        self._thread.start()
+
+    # -- public API ---------------------------------------------------------
+
+    def submit(self, fn: Callable[..., Any], *args, **kwargs) -> None:
+        """Enqueue ``fn(*args, **kwargs)``; blocks while the queue is full
+        (the writer-fell-behind barrier).  Raises any pending error from
+        an earlier task before accepting new work."""
+        self._raise_pending()
+        if self._closed:
+            raise RuntimeError("AsyncWriter is closed")
+        self._q.put((fn, args, kwargs))
+
+    def wait(self) -> None:
+        """Block until every submitted task has finished, then re-raise
+        the first captured task exception, if any."""
+        self._q.join()
+        self._raise_pending()
+
+    # legacy spelling: the old API returned a Thread with .join()
+    join = wait
+
+    def close(self) -> None:
+        """Drain, stop the worker thread, and surface any pending error."""
+        if not self._closed:
+            self._closed = True
+            self._q.put(_SENTINEL)
+            self._thread.join()
+        self._raise_pending()
+
+    @property
+    def pending_error(self) -> Optional[BaseException]:
+        """The captured-but-not-yet-re-raised task exception, if any."""
+        return self._err
+
+    def __enter__(self) -> "AsyncWriter":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        # don't mask an in-flight exception with a writer error
+        if exc_type is None:
+            self.close()
+        else:
+            self._closed = True
+            self._q.put(_SENTINEL)
+            self._thread.join()
+
+    # -- internals ----------------------------------------------------------
+
+    def _raise_pending(self) -> None:
+        with self._err_lock:
+            err, self._err = self._err, None
+        if err is not None:
+            raise err
+
+    def _worker(self) -> None:
+        while True:
+            item = self._q.get()
+            try:
+                if item is _SENTINEL:
+                    return
+                fn, args, kwargs = item
+                try:
+                    fn(*args, **kwargs)
+                except BaseException as e:          # noqa: BLE001
+                    with self._err_lock:
+                        if self._err is None:       # keep the first failure
+                            self._err = e
+            finally:
+                self._q.task_done()

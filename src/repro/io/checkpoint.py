@@ -1,25 +1,39 @@
-"""Checkpoint save/restore on the `repro.codecs` API.
+"""Async, per-host-sharded, crash-safe checkpointing on `repro.codecs`.
 
-Every leaf goes through a registered codec; which one is decided per
-leaf by a single `CheckpointPolicy` (replacing the old `mode=` string +
-`weights.checkpoint_codec_config` special case):
+Saving is a two-phase pipeline:
 
-    policy = CheckpointPolicy(codec="cusz", eb_valrel=1e-5,
-                              rules=(("opt", "int8"),))
-    save_checkpoint(d, step, tree, policy=policy)
+  1. **encode** (caller thread, on-device): every leaf goes through the
+     codec its `CheckpointPolicy` selects.  Split-stable codecs
+     (lossless / int8 / int16 / int8-block — see `Codec.shard_axis`)
+     split large leaves into one slice per host shard and encode each
+     slice so it decodes bit-identically to a whole-tensor encode;
+     chunked-transform codecs (cusz, zfp) keep the leaf whole and assign
+     it to the least-loaded owner shard.  Nothing gathers a replicated
+     full array to host: what leaves the device is the encoded payload,
+     and only in the write phase.
+  2. **write** (optionally async via `io.async_writer.AsyncWriter`):
+     pack each container to its storage form, stream one
+     ``shard_<host>.npz`` per shard, write ``manifest.json`` *last*, and
+     commit atomically by renaming the temp dir over the final name —
+     an interrupted save can never shadow the last complete checkpoint.
 
-Per tensor, the manifest records the codec id, codec version and the
-container header — so restore needs nothing from the caller: the
-`Container` alone decodes (dtype/shape/eb all ride in the header; the
-old code hardcoded restore dtypes and passed eb/shape out-of-band).
-Lossy codecs that fail to beat raw bytes fall back to "lossless" per
-tensor (the codec never expands a checkpoint).
+The manifest (format 3) records, per tensor, the codec id/version, the
+split axis, and each shard part's self-describing container header — so
+`load_checkpoint` reassembles from **any** host count (elastic restore):
+parts are concatenated in payload space when the codec supports it
+(`Codec.payload_axes`), and the decode runs jitted on-device with the
+*new* mesh's shardings — the bytes moved host->device are the stored
+compressed containers, not decoded f32 (the s8/huffman-on-the-wire
+trick, restore leg).  Arming `dist.context.use_restore_compress`
+additionally re-encodes raw (lossless-stored) float leaves over the
+int8-block wire codec for that move (lossy, eb = scale/2, off by
+default).  Manifest format 2 (single ``arrays.npz``) stays loadable
+behind a format gate.
 
-Restore is elastic: leaves are placed with whatever shardings the *new*
-mesh prescribes (re-sharding on restore = the elastic-rescale path,
-DESIGN.md §5).  Writes go through a temp dir + atomic rename, and an
-optional background thread (async staging) so the step loop is not
-blocked.
+Async semantics: pass ``writer=AsyncWriter(...)`` (or the legacy
+``background=True``, which uses a module-default writer).  ``submit``
+blocks when the writer falls behind (bounded queue), and write failures
+re-raise at the next save / ``writer.wait()`` — never silently lost.
 """
 from __future__ import annotations
 
@@ -27,18 +41,51 @@ import dataclasses
 import json
 import os
 import shutil
-import threading
 import warnings
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro import codecs
+from repro.io.async_writer import AsyncWriter
 
 CUSZ_MIN_SIZE = 4096
+MANIFEST_FORMAT = 3
+WIRE_BLOCK = 128                 # restore-leg int8-block wire granularity
 _SEP = "::"
 _FIELD_MARK = "__c__"
+_SHARD_FMT = "shard_{:05d}.npz"
+# codecs whose decode is jit-safe from the outside: the elastic restore
+# runs them on device with the target sharding as out_shardings.  cusz
+# reads max_len concretely (decompress jits internally, around that
+# host value) and zfp's block merge/pad helpers are host-side, so both
+# decode on host before placement.
+_JIT_DECODE = frozenset({"lossless", "int8", "int16", "int8-block"})
+
+#: telemetry of the most recent `load_checkpoint` call: step, manifest
+#: format, saved shard count, and the restore-leg wire accounting
+#: (bytes that moved host->device in container form vs. raw size).
+LAST_RESTORE_STATS: Dict[str, Any] = {}
+
+_default_writer: Optional[AsyncWriter] = None
+
+
+def default_writer() -> AsyncWriter:
+    """The module-level writer `background=True` saves go through."""
+    global _default_writer
+    if _default_writer is None:
+        _default_writer = AsyncWriter(max_pending=2)
+    return _default_writer
+
+
+def wait_for_writes() -> None:
+    """Barrier on the default background writer; re-raises any captured
+    write failure (the fix for the old fire-and-forget thread that
+    swallowed exceptions and lost checkpoints)."""
+    if _default_writer is not None:
+        _default_writer.wait()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,7 +103,7 @@ class CheckpointPolicy:
     kernel_impl: Optional[str] = None            # cusz dispatch policy
     rules: Tuple[Tuple[str, str], ...] = ()      # (key substring, codec id)
 
-    def codec_for(self, key: str, arr: np.ndarray) -> str:
+    def codec_for(self, key: str, arr) -> str:
         name = self.codec
         for sub, override in self.rules:
             if sub in key:
@@ -73,24 +120,31 @@ class CheckpointPolicy:
                               kernel_impl=self.kernel_impl)
         return codecs.get(name)
 
-    def _eligible(self, arr: np.ndarray) -> bool:
+    def _eligible(self, arr) -> bool:
         try:
-            floating = jax.numpy.issubdtype(arr.dtype, jax.numpy.floating)
+            floating = jnp.issubdtype(arr.dtype, jnp.floating)
         except TypeError:
             floating = False
         if not floating or arr.size < self.min_size:
             return False
+        if isinstance(arr, jax.Array):
+            # one jitted reduction; only the bool scalar crosses to host
+            # (the old form np.asarray'd the full leaf)
+            f = arr.astype(jnp.float32)
+            ok = jnp.all(jnp.isfinite(f)) & (jnp.max(f) - jnp.min(f) > 0)
+            return bool(ok)
         f = np.asarray(arr, np.float32) if arr.dtype != np.float32 else arr
         return bool(np.all(np.isfinite(f))
                     and float(np.max(f) - np.min(f)) > 0)
 
 
-def _flatten(tree) -> Dict[str, np.ndarray]:
+def _flatten(tree) -> Dict[str, Any]:
+    """key -> leaf, keeping device arrays on device (no host gather)."""
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
         key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
                         for k in path)
-        flat[key] = np.asarray(jax.device_get(leaf))
+        flat[key] = leaf if isinstance(leaf, jax.Array) else jnp.asarray(leaf)
     return flat
 
 
@@ -106,49 +160,147 @@ def _legacy_policy(mode, eb_valrel, kernel_impl) -> CheckpointPolicy:
         kernel_impl=kernel_impl)
 
 
-def save_checkpoint(ckpt_dir: str, step: int, tree, mode: Optional[str] = None,
-                    eb_valrel: Optional[float] = None,
-                    background: bool = False,
-                    kernel_impl: Optional[str] = None,
-                    policy: Optional[CheckpointPolicy] = None):
-    """Write `tree` under `ckpt_dir/step_<step>` via the codec registry.
+# ---------------------------------------------------------------------------
+# Phase 1: encode + shard planning
+# ---------------------------------------------------------------------------
 
-    `policy` selects codecs per leaf; the legacy `mode=`/`eb_valrel=`/
-    `kernel_impl=` kwargs still work behind a DeprecationWarning."""
-    if policy is None:
-        if mode is not None or eb_valrel is not None \
-                or kernel_impl is not None:
-            policy = _legacy_policy(mode, eb_valrel, kernel_impl)
-        else:
-            policy = CheckpointPolicy()
-    if background:
-        t = threading.Thread(target=save_checkpoint,
-                             args=(ckpt_dir, step, tree),
-                             kwargs={"policy": policy}, daemon=True)
-        t.start()
-        return t
-    flat = _flatten(tree)
-    tmp = os.path.join(ckpt_dir, f".tmp_step_{step:08d}")
-    final = os.path.join(ckpt_dir, f"step_{step:08d}")
-    os.makedirs(tmp, exist_ok=True)
-    manifest: Dict[str, Any] = {"step": step, "format": 2,
-                                "policy": policy.codec, "tensors": {}}
-    arrays: Dict[str, np.ndarray] = {}
-    codec_cache: Dict[str, codecs.Codec] = {}
-    for key, arr in flat.items():
-        name = policy.codec_for(key, arr)
+@dataclasses.dataclass
+class _LeafPlan:
+    key: str
+    codec: str                       # final codec id (post-fallback)
+    version: int
+    axis: Optional[int]              # split axis, None = owner-assigned
+    parts: List[codecs.Container]    # device-form, one per shard slot
+    shards: List[int]                # host shard id per part
+    raw_nbytes: int
+
+
+def _stored_size_estimate(codec: codecs.Codec, parts) -> int:
+    """Storage bytes without packing: shape metadata plus (for cusz) the
+    per-chunk word counts and outlier count — scalar-sized host syncs,
+    never a payload gather."""
+    if codec.name == "cusz":
+        from repro.core import compressor as CZ
+        total = 0
+        for p in parts:
+            blob = CZ.CompressedBlob(**{f: p.payload[f]
+                                        for f in CZ.CompressedBlob._fields})
+            total += CZ.compressed_bytes(blob, int(p.header.param("nbins")))
+        return total
+    return sum(codec.stored_nbytes(p) if codec.name == "zfp"
+               else sum(np.dtype(v.dtype).itemsize * v.size
+                        for v in p.payload.values())
+               for p in parts)
+
+
+def _encode_tree(flat: Dict[str, Any], policy: CheckpointPolicy,
+                 nshards: int, snapshot: bool) -> List[_LeafPlan]:
+    """Run every leaf's codec on device and plan shard placement.
+
+    `snapshot` (async mode): identity-encoded payloads that alias the
+    live leaf buffer are copied, so donation/mutation of the train state
+    during the overlapped write cannot corrupt the checkpoint.
+    """
+    codec_cache: Dict[str, codecs.Codec] = {"lossless": codecs.get("lossless")}
+    plans: List[_LeafPlan] = []
+    owner_load = [0] * nshards
+
+    def lossless_parts(leaf, axis):
+        codec = codec_cache["lossless"]
+        if axis is None or nshards == 1:
+            axis = codec.shard_axis(leaf.shape, nshards)
+        if axis is None:
+            return None, [codec.encode(leaf)]
+        return axis, codec.encode_parts(leaf, axis, nshards)
+
+    # pass A: dispatch every encode (device work pipelines across leaves)
+    staged = []
+    for key, leaf in flat.items():
+        name = policy.codec_for(key, leaf)
         if name not in codec_cache:
             codec_cache[name] = policy.make_codec(name)
-        packed, name = _encode_leaf(codec_cache, name, arr)
-        header, fields = codecs.to_arrays(packed)
-        for f, v in fields.items():
-            arrays[f"{key}{_SEP}{_FIELD_MARK}{_SEP}{f}"] = v
-        entry = {"codec": name, "version": packed.header.version,
-                 "header": header}
+        codec = codec_cache[name]
+        axis = codec.shard_axis(leaf.shape, nshards) if nshards > 1 else None
+        try:
+            if axis is not None:
+                parts = codec.encode_parts(leaf, axis, nshards)
+            else:
+                parts = [codec.encode(leaf)]
+        except (ValueError, AssertionError):
+            # codec cannot represent the leaf (eb below f32 resolution,
+            # block-misaligned dims): store raw
+            name, codec = "lossless", codec_cache["lossless"]
+            axis, parts = lossless_parts(leaf, None)
+        staged.append((key, leaf, name, axis, parts))
+
+    # pass B: validity + does-it-win decisions (scalar-sized syncs only),
+    # falling back to lossless so the codec never expands a checkpoint
+    for key, leaf, name, axis, parts in staged:
+        raw = int(leaf.size) * np.dtype(leaf.dtype).itemsize
+        codec = codec_cache[name]
         if name != "lossless":
-            entry["ratio"] = arr.nbytes / max(1, packed.nbytes)
-        manifest["tensors"][key] = entry
-    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+            ok = all(codec.valid(p) for p in parts)
+            if not ok or _stored_size_estimate(codec, parts) >= raw:
+                name, codec = "lossless", codec_cache["lossless"]
+                axis, parts = lossless_parts(leaf, axis)
+        if snapshot and name == "lossless":
+            parts = [p.replace(payload={
+                k: (jnp.copy(v) if v is leaf else v)
+                for k, v in p.payload.items()}) for p in parts]
+        if axis is not None:
+            shards = list(range(nshards))
+        else:                         # owner shard: least-loaded so far
+            h = int(np.argmin(owner_load)) if nshards > 1 else 0
+            shards = [h]
+            owner_load[h] += raw
+        plans.append(_LeafPlan(key, name, codec.version, axis, parts,
+                               shards, raw))
+    return plans
+
+
+# ---------------------------------------------------------------------------
+# Phase 2: pack + shard files + manifest + atomic commit
+# ---------------------------------------------------------------------------
+
+def _write_shard(path: str, arrays: Dict[str, np.ndarray]) -> None:
+    """One host's shard file.  Module-level so crash-consistency tests
+    can inject failures mid-save."""
+    np.savez(path, **arrays)
+
+
+def _write_step(ckpt_dir: str, step: int, plans: Sequence[_LeafPlan],
+                policy_codec: str, nshards: int) -> str:
+    tmp = os.path.join(ckpt_dir, f".tmp_step_{step:08d}")
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    shutil.rmtree(tmp, ignore_errors=True)       # stale crashed attempt
+    os.makedirs(tmp, exist_ok=True)
+    codec_cache: Dict[str, codecs.Codec] = {}
+    shard_arrays: List[Dict[str, np.ndarray]] = [{} for _ in range(nshards)]
+    manifest: Dict[str, Any] = {"step": step, "format": MANIFEST_FORMAT,
+                                "nshards": nshards, "policy": policy_codec,
+                                "tensors": {}}
+    for plan in plans:
+        if plan.codec not in codec_cache:
+            codec_cache[plan.codec] = codecs.get(plan.codec)
+        codec = codec_cache[plan.codec]
+        entry: Dict[str, Any] = {"codec": plan.codec, "version": plan.version,
+                                 "axis": plan.axis, "shards": []}
+        stored = 0
+        for i, (part, h) in enumerate(zip(plan.parts, plan.shards)):
+            header, fields = codecs.to_arrays(codec.pack(part))
+            stored += sum(v.nbytes for v in fields.values())
+            for f, v in fields.items():
+                shard_arrays[h][_SEP.join((plan.key, _FIELD_MARK,
+                                           str(i), f))] = v
+            entry["shards"].append({"shard": h, "header": header})
+        if plan.codec != "lossless":
+            entry["ratio"] = plan.raw_nbytes / max(1, stored)
+        manifest["tensors"][plan.key] = entry
+    for h in range(nshards):
+        _write_shard(os.path.join(tmp, _SHARD_FMT.format(h)),
+                     shard_arrays[h])
+    # manifest last: its presence marks the step complete inside the tmp
+    # dir; the rename below makes completeness atomic from the outside
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
     if os.path.exists(final):
@@ -157,28 +309,46 @@ def save_checkpoint(ckpt_dir: str, step: int, tree, mode: Optional[str] = None,
     return final
 
 
-def _encode_leaf(codec_cache, name, arr):
-    """encode+pack one leaf; lossy codecs that don't win (entropy-dense
-    tensors, e.g. random init at tight eb, would expand) or can't
-    represent the tensor (eb below f32 resolution, block-misaligned
-    dims) fall back to raw."""
-    if name != "lossless":
-        try:
-            codec = codec_cache[name]
-            c = codec.encode(arr)
-            if codec.valid(c):
-                packed = codec.pack(c)
-                if packed.nbytes < arr.nbytes:
-                    return packed, name
-        except (ValueError, AssertionError):
-            pass
-        name = "lossless"
-        if name not in codec_cache:
-            codec_cache[name] = codecs.get("lossless")
-    return codec_cache[name].pack(codec_cache[name].encode(arr)), name
+def save_checkpoint(ckpt_dir: str, step: int, tree, mode: Optional[str] = None,
+                    eb_valrel: Optional[float] = None,
+                    background: bool = False,
+                    kernel_impl: Optional[str] = None,
+                    policy: Optional[CheckpointPolicy] = None,
+                    nshards: Optional[int] = None,
+                    writer: Optional[AsyncWriter] = None):
+    """Write `tree` under `ckpt_dir/step_<step>` via the codec registry.
+
+    `policy` selects codecs per leaf.  `nshards` splits the write into
+    per-host shard files (default: `jax.process_count()`).  `writer`
+    makes the write phase asynchronous: the call returns after the
+    on-device encode, the file I/O runs on the writer thread, and errors
+    re-raise at the next `submit`/`wait`.  `background=True` is the
+    legacy spelling (module-default writer).  Returns the final step dir
+    (sync) or the writer (async).  The legacy `mode=`/`eb_valrel=`/
+    `kernel_impl=` kwargs still work behind a DeprecationWarning."""
+    if policy is None:
+        if mode is not None or eb_valrel is not None \
+                or kernel_impl is not None:
+            policy = _legacy_policy(mode, eb_valrel, kernel_impl)
+        else:
+            policy = CheckpointPolicy()
+    if writer is None and background:
+        writer = default_writer()
+    if nshards is None:
+        nshards = max(1, jax.process_count())
+    os.makedirs(ckpt_dir, exist_ok=True)
+    plans = _encode_tree(_flatten(tree), policy, int(nshards),
+                         snapshot=writer is not None)
+    if writer is not None:
+        writer.submit(_write_step, ckpt_dir, step, plans, policy.codec,
+                      int(nshards))
+        return writer
+    return _write_step(ckpt_dir, step, plans, policy.codec, int(nshards))
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:
+    """Newest *complete* step (in-flight ``.tmp_step_*`` dirs from a
+    crashed or still-running save are never visible here)."""
     if not os.path.isdir(ckpt_dir):
         return None
     steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
@@ -186,12 +356,103 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+# ---------------------------------------------------------------------------
+# Restore
+# ---------------------------------------------------------------------------
+
+def _leaf_key(path) -> str:
+    return _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                     for k in path)
+
+
+def _container_fields(arrays, prefix: str) -> Dict[str, np.ndarray]:
+    return {k[len(prefix):]: arrays[k] for k in arrays.files
+            if k.startswith(prefix)}
+
+
+def _assemble_v3(d: str, key: str, entry, shard_files):
+    """Read a tensor's shard parts and merge them into one container, or
+    (when the codec has no payload-space concat) a decoded host array."""
+    parts = []
+    for i, sh in enumerate(entry["shards"]):
+        arrays = shard_files(int(sh["shard"]))
+        prefix = _SEP.join((key, _FIELD_MARK, str(i), ""))
+        parts.append(codecs.from_arrays(sh["header"],
+                                        _container_fields(arrays, prefix)))
+    if len(parts) == 1:
+        return parts[0]
+    codec = codecs.get(entry["codec"])
+    axes = codec.payload_axes(int(entry["axis"]))
+    if axes is not None:
+        return codecs.concat_containers(parts, int(entry["axis"]), axes)
+    vals = [np.asarray(jax.device_get(codecs.decode(p))) for p in parts]
+    return np.concatenate(vals, axis=int(entry["axis"]))
+
+
+def _lossless_host_view(c: codecs.Container) -> np.ndarray:
+    """The raw values of a packed lossless container, staying on host
+    (no device round-trip; undoes the bf16 storage bitcast)."""
+    arr = np.asarray(c.payload["data"])
+    want = np.dtype(c.header.dtype)
+    if arr.dtype != want and arr.dtype.itemsize == want.itemsize:
+        arr = arr.view(want)
+    return arr.reshape(c.header.shape)
+
+
+def _wire_recode(raw: np.ndarray, wire_name: str):
+    """Re-encode a raw leaf over the blockwise wire codec for the
+    host->device reshard move (the armed `use_restore_compress` leg).
+    Quantizes with host numpy — the whole point is that only q + scales
+    ever cross to the device — producing the exact payload/header layout
+    the registry codec decodes.  Returns (codec, container, n_valid);
+    decode slices the edge padding off."""
+    wire = codecs.get_block_codec(wire_name, axis=0, block=WIRE_BLOCK)
+    flat = np.asarray(raw, np.float32).reshape(-1)
+    pad = (-flat.size) % WIRE_BLOCK
+    if pad:
+        flat = np.pad(flat, (0, pad), mode="edge")
+    xb = flat.reshape(-1, WIRE_BLOCK)
+    scale = np.maximum(np.abs(xb).max(axis=1, keepdims=True) / 127.0,
+                       1e-30).astype(np.float32)
+    q = np.clip(np.rint(xb / scale), -127, 127).astype(np.int8)
+    cont = codecs.Container(
+        codecs.make_header(wire.name, wire.version, flat,
+                           axis=0, block=WIRE_BLOCK),
+        {"q": q.reshape(-1), "scale": scale.reshape(-1)})
+    return wire, cont, flat.size - pad
+
+
+# jitted-decode cache: one compile per (codec, target shape/dtype,
+# placement) signature instead of one per leaf per load call
+_decode_fn_cache: Dict[Any, Any] = {}
+
+
+def _jitted_decode(codec: codecs.Codec, like, shd, postslice: int = 0):
+    key = (codec, tuple(like.shape), np.dtype(like.dtype).str, shd,
+           postslice)
+    if key not in _decode_fn_cache:
+        if postslice:
+            def fn(c):
+                return codec.decode(c)[:postslice].reshape(
+                    tuple(like.shape)).astype(like.dtype)
+        else:
+            def fn(c):
+                return codec.decode(c, like=like)
+        _decode_fn_cache[key] = (jax.jit(fn, out_shardings=shd)
+                                 if shd is not None else jax.jit(fn))
+    return _decode_fn_cache[key]
+
+
 def load_checkpoint(ckpt_dir: str, template, step: Optional[int] = None,
                     shardings=None, kernel_impl: Optional[str] = None):
     """template: pytree with the target treedef (e.g. fresh init or
-    eval_shape).  shardings: optional matching pytree of NamedSharding for
-    elastic placement on the current mesh.  kernel_impl: dispatch policy
-    for the cusz decode path (None = ambient/auto)."""
+    eval_shape).  shardings: optional matching pytree of NamedSharding
+    for elastic placement on the current mesh — reassembly then decodes
+    jitted on-device with the new placement, moving the stored
+    *containers* host->device rather than decoded arrays.  kernel_impl:
+    dispatch policy for the cusz decode path (None = ambient/auto)."""
+    from repro.dist import context as dist_ctx
+
     if step is None:
         step = latest_step(ckpt_dir)
         assert step is not None, f"no checkpoints under {ckpt_dir}"
@@ -199,34 +460,85 @@ def load_checkpoint(ckpt_dir: str, template, step: Optional[int] = None,
     with open(os.path.join(d, "manifest.json")) as f:
         manifest = json.load(f)
     fmt = manifest.get("format", 1)
-    if fmt != 2:
+    if fmt == 1:
+        raise ValueError(
+            f"checkpoint {d} uses manifest format 1, which predates the "
+            f"repro.codecs API — re-save from a checkout that wrote it.")
+    if fmt not in (2, MANIFEST_FORMAT):
         raise ValueError(
             f"checkpoint {d} uses manifest format {fmt}; this reader "
-            f"supports format 2 (per-tensor codec containers).  Format-1 "
-            f"checkpoints predate the repro.codecs API — re-save from a "
-            f"checkout that wrote them.")
-    arrays = np.load(os.path.join(d, "arrays.npz"))
+            f"supports formats 2 (single-file containers) and "
+            f"{MANIFEST_FORMAT} (sharded containers).")
 
-    def restore_one(key, entry):
-        prefix = f"{key}{_SEP}{_FIELD_MARK}{_SEP}"
-        fields = {k[len(prefix):]: arrays[k] for k in arrays.files
-                  if k.startswith(prefix)}
-        container = codecs.from_arrays(entry["header"], fields)
+    file_cache: Dict[Any, Any] = {}
+
+    def shard_files(h: int):
+        if h not in file_cache:
+            file_cache[h] = np.load(os.path.join(d, _SHARD_FMT.format(h)))
+        return file_cache[h]
+
+    def v2_arrays():
+        if "v2" not in file_cache:
+            file_cache["v2"] = np.load(os.path.join(d, "arrays.npz"))
+        return file_cache["v2"]
+
+    stats = {"step": step, "format": fmt,
+             "saved_nshards": int(manifest.get("nshards", 1)),
+             "leaves": 0, "wire_leaves": 0, "recoded_leaves": 0,
+             "wire_bytes": 0, "raw_bytes": 0}
+    wire_name = dist_ctx.restore_codec()
+
+    def assemble(key, entry):
+        if fmt == 2:
+            prefix = _SEP.join((key, _FIELD_MARK, ""))
+            return codecs.from_arrays(
+                entry["header"], _container_fields(v2_arrays(), prefix))
+        return _assemble_v3(d, key, entry, shard_files)
+
+    def place(key, entry, leaf, shd):
+        got = assemble(key, entry)
+        name = entry["codec"]
+        like = jax.ShapeDtypeStruct(tuple(leaf.shape), leaf.dtype)
+        stats["leaves"] += 1
+        stats["raw_bytes"] += int(leaf.size) * np.dtype(leaf.dtype).itemsize
         kw = {"kernel_impl": kernel_impl} \
-            if entry["codec"] == "cusz" and kernel_impl is not None else {}
-        out = codecs.decode(container, **kw)
-        return np.asarray(jax.device_get(out))
+            if name == "cusz" and kernel_impl is not None else {}
+        if isinstance(got, codecs.Container):
+            # optional restore-leg wire compression of raw float leaves:
+            # quantized on host, so only q + scales cross to the device
+            if (wire_name is not None and name == "lossless"
+                    and jnp.issubdtype(np.dtype(got.header.dtype),
+                                       jnp.floating)
+                    and got.header.shape
+                    and int(np.prod(got.header.shape)) >= CUSZ_MIN_SIZE):
+                wire, cont, n = _wire_recode(_lossless_host_view(got),
+                                             wire_name)
+                stats["recoded_leaves"] += 1
+                stats["wire_leaves"] += 1
+                stats["wire_bytes"] += cont.nbytes
+                return _jitted_decode(wire, like, shd, postslice=n)(cont)
+            if name in _JIT_DECODE and shd is not None:
+                codec = codecs.get(name, **kw)
+                cont = codec.unpack(got)
+                stats["wire_leaves"] += 1
+                stats["wire_bytes"] += sum(
+                    int(v.size) * np.dtype(v.dtype).itemsize
+                    for v in got.payload.values())
+                return _jitted_decode(codec, like, shd)(cont)
+            got = np.asarray(jax.device_get(codecs.decode(got, **kw)))
+        arr = got.astype(leaf.dtype).reshape(leaf.shape)
+        return (jax.device_put(arr, shd) if shd is not None
+                else jnp.asarray(arr))
 
     leaves_with_path = jax.tree_util.tree_flatten_with_path(template)[0]
     treedef = jax.tree_util.tree_structure(template)
     shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
-                    if shardings is not None else [None] * len(leaves_with_path))
+                    if shardings is not None
+                    else [None] * len(leaves_with_path))
     out = []
     for (path, leaf), shd in zip(leaves_with_path, shard_leaves):
-        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
-                        for k in path)
-        arr = restore_one(key, manifest["tensors"][key]).astype(leaf.dtype)
-        arr = arr.reshape(leaf.shape)
-        out.append(jax.device_put(arr, shd) if shd is not None
-                   else jax.numpy.asarray(arr))
+        key = _leaf_key(path)
+        out.append(place(key, manifest["tensors"][key], leaf, shd))
+    LAST_RESTORE_STATS.clear()
+    LAST_RESTORE_STATS.update(stats)
     return jax.tree_util.tree_unflatten(treedef, out), step

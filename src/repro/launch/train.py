@@ -46,6 +46,12 @@ def main():
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--checkpoint-every", type=int, default=100)
+    ap.add_argument("--checkpoint-sync", action="store_true",
+                    help="block the step loop on checkpoint writes "
+                         "(default: async writer, bounded queue)")
+    ap.add_argument("--checkpoint-shards", type=int, default=None,
+                    help="per-host shard files per step "
+                         "(default: jax.process_count())")
     ap.add_argument("--lower-only", action="store_true")
     args = ap.parse_args()
 
@@ -86,21 +92,28 @@ def main():
                 args.checkpoint_dir, (params, opt))
             start += 1
             print(f"resumed from step {start}")
-        for step in range(start, args.steps):
-            batch = pipeline.global_batch(mesh, cfg.vocab, args.batch,
-                                          args.seq, step, podded=podded)
-            t0 = time.perf_counter()
-            loss, params, opt = step_fn(params, opt, batch)
-            loss.block_until_ready()
-            dt = time.perf_counter() - t0
-            if step % 5 == 0 or step == args.steps - 1:
-                tps = args.batch * args.seq / dt
-                print(f"step {step:5d}  loss {float(loss):.4f}  "
-                      f"{dt * 1e3:7.1f} ms  {tps:9.0f} tok/s")
-            if args.checkpoint_dir and (step + 1) % args.checkpoint_every == 0:
-                ckpt_io.save_checkpoint(
-                    args.checkpoint_dir, step, (params, opt),
-                    policy=ckpt_io.CheckpointPolicy(codec="cusz"))
+        writer = None if args.checkpoint_sync or not args.checkpoint_dir \
+            else ckpt_io.AsyncWriter(max_pending=1)
+        try:
+            for step in range(start, args.steps):
+                batch = pipeline.global_batch(mesh, cfg.vocab, args.batch,
+                                              args.seq, step, podded=podded)
+                t0 = time.perf_counter()
+                loss, params, opt = step_fn(params, opt, batch)
+                loss.block_until_ready()
+                dt = time.perf_counter() - t0
+                if step % 5 == 0 or step == args.steps - 1:
+                    tps = args.batch * args.seq / dt
+                    print(f"step {step:5d}  loss {float(loss):.4f}  "
+                          f"{dt * 1e3:7.1f} ms  {tps:9.0f} tok/s")
+                if args.checkpoint_dir and (step + 1) % args.checkpoint_every == 0:
+                    ckpt_io.save_checkpoint(
+                        args.checkpoint_dir, step, (params, opt),
+                        policy=ckpt_io.CheckpointPolicy(codec="cusz"),
+                        nshards=args.checkpoint_shards, writer=writer)
+        finally:
+            if writer is not None:
+                writer.close()     # drain + surface any async write failure
 
 
 if __name__ == "__main__":

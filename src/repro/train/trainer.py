@@ -35,6 +35,10 @@ class LoopConfig:
     # repro.codecs registry (one policy object, no mode strings)
     checkpoint_policy: ckpt_io.CheckpointPolicy = \
         ckpt_io.CheckpointPolicy(codec="cusz", eb_valrel=1e-5)
+    # async write phase: the step-N encode/write overlaps the step-N+1
+    # compute; submit blocks only when the writer falls behind
+    checkpoint_async: bool = True
+    checkpoint_nshards: Optional[int] = None   # None = jax.process_count()
     log_every: int = 10
 
 
@@ -59,25 +63,43 @@ class Trainer:
                 lc.checkpoint_dir, (params, opt))
             start += 1
         last_good = None
-        for step in range(start, lc.steps):
-            toks = jnp.asarray(pipeline.host_batch(
-                self.cfg.vocab, lc.batch, lc.seq, step, lc.seed))
-            t0 = time.perf_counter()
-            loss, params, opt = self.step_fn(params, opt, toks)
-            loss.block_until_ready()
-            dt = time.perf_counter() - t0
-            slow = self.straggler.observe(step, dt)
-            if fault.loss_is_bad(loss):
-                # NaN guard: restore last good state, skip this step's data
-                if last_good is not None:
-                    params, opt = last_good
-                continue
-            self.history.append({"step": step, "loss": float(loss),
-                                 "dt": dt, "slow": bool(slow)})
-            if step % 20 == 0:
-                last_good = (params, opt)
-            if lc.checkpoint_dir and (step + 1) % lc.checkpoint_every == 0:
-                ckpt_io.save_checkpoint(lc.checkpoint_dir, step,
-                                        (params, opt),
-                                        policy=lc.checkpoint_policy)
+        # bounded to one in-flight write: a second save while the writer
+        # is still streaming the previous step blocks the loop (the
+        # writer-fell-behind barrier) instead of growing an unbounded
+        # backlog of device snapshots; scoped to this run so the worker
+        # thread never outlives it
+        writer = (ckpt_io.AsyncWriter(max_pending=1)
+                  if lc.checkpoint_async and lc.checkpoint_dir else None)
+        try:
+            for step in range(start, lc.steps):
+                toks = jnp.asarray(pipeline.host_batch(
+                    self.cfg.vocab, lc.batch, lc.seq, step, lc.seed))
+                t0 = time.perf_counter()
+                loss, params, opt = self.step_fn(params, opt, toks)
+                loss.block_until_ready()
+                dt = time.perf_counter() - t0
+                slow = self.straggler.observe(step, dt)
+                if fault.loss_is_bad(loss):
+                    # NaN guard: restore last good state, skip this step's data
+                    if last_good is not None:
+                        params, opt = last_good
+                    continue
+                self.history.append({"step": step, "loss": float(loss),
+                                     "dt": dt, "slow": bool(slow)})
+                if step % 20 == 0:
+                    last_good = (params, opt)
+                if lc.checkpoint_dir and (step + 1) % lc.checkpoint_every == 0:
+                    # async: returns after the on-device encode; the write
+                    # streams on the writer thread under the next steps
+                    ckpt_io.save_checkpoint(lc.checkpoint_dir, step,
+                                            (params, opt),
+                                            policy=lc.checkpoint_policy,
+                                            nshards=lc.checkpoint_nshards,
+                                            writer=writer)
+        finally:
+            # drain + stop the worker and surface any write failure
+            # instead of losing it with the thread (the old background=
+            # stub bug)
+            if writer is not None:
+                writer.close()
         return self.history

@@ -75,6 +75,9 @@ def _install_hypothesis_shim():
             sig = inspect.signature(fn)
             params = list(sig.parameters.values())
             keep = params[:len(params) - len(strats)]
+            # the trailing params are strategy-bound; fill them by NAME so
+            # pytest passing fixtures/parametrize args as kwargs still works
+            strat_names = [p.name for p in params[len(params) - len(strats):]]
 
             @functools.wraps(fn)
             def wrapper(*args, **kwargs):
@@ -82,7 +85,8 @@ def _install_hypothesis_shim():
                 for i in range(n_examples):
                     vals = tuple(s.example(rng, i) for s in strats)
                     try:
-                        fn(*args, *vals, **kwargs)
+                        fn(*args, **kwargs,
+                           **dict(zip(strat_names, vals)))
                     except Exception as e:
                         raise AssertionError(
                             f"hypothesis-shim falsifying example "

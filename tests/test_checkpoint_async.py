@@ -1,0 +1,336 @@
+"""Crash consistency, async-writer semantics, shard layout, and the
+manifest v2 -> v3 format gate of the rewritten checkpoint subsystem."""
+import json
+import os
+import tempfile
+import threading
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import codecs
+from repro.dist import context as dist_ctx
+from repro.io import checkpoint as CK
+from repro.io.async_writer import AsyncWriter
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "w": jnp.asarray(np.cumsum(rng.standard_normal((64, 128)),
+                                   axis=-1).astype(np.float32)),
+        "bias": jnp.asarray(rng.standard_normal(8).astype(np.float32)),
+        "step": jnp.asarray(np.int32(7)),
+        "opt": {"m": jnp.asarray(
+            rng.standard_normal((64, 128)).astype(np.float32))},
+        "bf": jnp.asarray(rng.standard_normal((32, 256)).astype(np.float32)
+                          ).astype(jnp.bfloat16),
+    }
+
+
+POLICY = CK.CheckpointPolicy(codec="cusz", eb_valrel=1e-4,
+                             rules=(("opt", "int8"),))
+
+
+def _assert_trees_bitwise_equal(a, b):
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        x, y = np.asarray(la), np.asarray(lb)
+        if x.dtype == jnp.bfloat16:
+            x, y = x.view(np.uint16), y.view(np.uint16)
+        np.testing.assert_array_equal(x, y)
+
+
+class TestAsyncWriter:
+    def test_runs_tasks_in_order_and_waits(self):
+        out = []
+        with AsyncWriter(max_pending=2) as w:
+            for i in range(5):
+                w.submit(out.append, i)
+            w.wait()
+            assert out == [0, 1, 2, 3, 4]
+
+    def test_exception_reraised_at_wait(self):
+        w = AsyncWriter()
+        w.submit(lambda: (_ for _ in ()).throw(IOError("disk gone")))
+        with pytest.raises(IOError, match="disk gone"):
+            w.wait()
+        w.wait()                  # error is consumed, writer still usable
+        w.close()
+
+    def test_exception_reraised_at_next_submit(self):
+        w = AsyncWriter()
+        w.submit(lambda: 1 / 0)
+        w._q.join()               # let the failure land
+        with pytest.raises(ZeroDivisionError):
+            w.submit(print, "never runs")
+        w.close()
+
+    def test_first_error_wins(self):
+        w = AsyncWriter()
+        w.submit(lambda: (_ for _ in ()).throw(IOError("first")))
+        w.submit(lambda: (_ for _ in ()).throw(ValueError("second")))
+        with pytest.raises(IOError, match="first"):
+            w.wait()
+        w.close()
+
+    def test_bounded_queue_applies_backpressure(self):
+        """With max_pending=1, a submit while a task is running and one
+        is queued must block until the running task finishes — the
+        writer-fell-behind barrier the trainer relies on."""
+        release = threading.Event()
+        w = AsyncWriter(max_pending=1)
+        w.submit(release.wait)            # running (blocks the worker)
+        w.submit(lambda: None)            # fills the queue
+        t0 = time.perf_counter()
+        blocker = threading.Thread(
+            target=lambda: w.submit(lambda: None))
+        blocker.start()
+        blocker.join(timeout=0.15)
+        assert blocker.is_alive()         # still blocked on the full queue
+        release.set()
+        blocker.join(timeout=5)
+        assert not blocker.is_alive()
+        assert time.perf_counter() - t0 >= 0.15
+        w.wait()
+        w.close()
+
+    def test_closed_writer_rejects_submits(self):
+        w = AsyncWriter()
+        w.close()
+        with pytest.raises(RuntimeError, match="closed"):
+            w.submit(lambda: None)
+
+
+class TestCrashConsistency:
+    def _failing_shard_writer(self, monkeypatch, fail_after: int):
+        real = CK._write_shard
+        calls = {"n": 0}
+
+        def failing(path, arrays):
+            calls["n"] += 1
+            if calls["n"] > fail_after:
+                raise IOError("injected: writer died mid-save")
+            real(path, arrays)
+
+        monkeypatch.setattr(CK, "_write_shard", failing)
+        return calls
+
+    def test_interrupted_save_never_shadows_previous_step(self, monkeypatch):
+        """Kill the writer after shard 0 of a multi-shard save: the
+        previous complete step must stay the restorable latest."""
+        tree = _tree()
+        with tempfile.TemporaryDirectory() as d:
+            CK.save_checkpoint(d, 0, tree, policy=POLICY, nshards=3)
+            self._failing_shard_writer(monkeypatch, fail_after=1)
+            with pytest.raises(IOError, match="injected"):
+                CK.save_checkpoint(d, 1, _tree(seed=1), policy=POLICY,
+                                   nshards=3)
+            assert CK.latest_step(d) == 0          # tmp dir is invisible
+            restored, step = CK.load_checkpoint(d, tree)
+            assert step == 0
+            np.testing.assert_array_equal(np.asarray(restored["step"]),
+                                          np.asarray(tree["step"]))
+
+    def test_async_failure_reraises_at_wait_and_prior_step_survives(
+            self, monkeypatch):
+        tree = _tree()
+        with tempfile.TemporaryDirectory() as d:
+            CK.save_checkpoint(d, 0, tree, policy=POLICY, nshards=2)
+            self._failing_shard_writer(monkeypatch, fail_after=0)
+            w = AsyncWriter()
+            assert CK.save_checkpoint(d, 1, _tree(seed=1), policy=POLICY,
+                                      nshards=2, writer=w) is w
+            with pytest.raises(IOError, match="injected"):
+                w.wait()
+            assert CK.latest_step(d) == 0
+            _, step = CK.load_checkpoint(d, tree)
+            assert step == 0
+            w.close()
+
+    def test_legacy_background_failures_surface(self, monkeypatch):
+        """The old fire-and-forget thread swallowed write exceptions and
+        lost the checkpoint; background=True must now re-raise them at
+        the module barrier."""
+        self._failing_shard_writer(monkeypatch, fail_after=0)
+        monkeypatch.setattr(CK, "_default_writer", None)  # fresh writer
+        with tempfile.TemporaryDirectory() as d:
+            ret = CK.save_checkpoint(d, 0, _tree(), background=True)
+            assert isinstance(ret, AsyncWriter)
+            with pytest.raises(IOError, match="injected"):
+                CK.wait_for_writes()
+
+    def test_crashed_tmp_dir_is_cleaned_on_retry(self, monkeypatch):
+        tree = _tree()
+        with tempfile.TemporaryDirectory() as d:
+            self._failing_shard_writer(monkeypatch, fail_after=1)
+            with pytest.raises(IOError):
+                CK.save_checkpoint(d, 5, tree, policy=POLICY, nshards=3)
+            assert os.path.isdir(os.path.join(d, ".tmp_step_00000005"))
+            monkeypatch.undo()
+            final = CK.save_checkpoint(d, 5, tree, policy=POLICY, nshards=3)
+            assert CK.latest_step(d) == 5
+            assert not os.path.isdir(os.path.join(d, ".tmp_step_00000005"))
+            restored, _ = CK.load_checkpoint(d, tree)
+            _assert_trees_bitwise_equal(
+                restored, CK.load_checkpoint(os.path.dirname(final), tree)[0])
+
+
+class TestShardedLayout:
+    def test_sharded_save_matches_single_file_bit_for_bit(self):
+        """Per codec policy: an nshards=4 save restores bit-identically
+        to the nshards=1 single-file save of the same state."""
+        tree = _tree()
+        policies = (CK.CheckpointPolicy(codec="lossless"),
+                    CK.CheckpointPolicy(codec="int8"),
+                    POLICY)
+        for pol in policies:
+            with tempfile.TemporaryDirectory() as d1, \
+                    tempfile.TemporaryDirectory() as d4:
+                CK.save_checkpoint(d1, 0, tree, policy=pol, nshards=1)
+                with AsyncWriter(max_pending=1) as w:
+                    CK.save_checkpoint(d4, 0, tree, policy=pol, nshards=4,
+                                       writer=w)
+                    w.wait()
+                a, _ = CK.load_checkpoint(d1, tree)
+                b, _ = CK.load_checkpoint(d4, tree)
+                _assert_trees_bitwise_equal(a, b)
+
+    def test_manifest_v3_layout(self):
+        tree = _tree()
+        with tempfile.TemporaryDirectory() as d:
+            final = CK.save_checkpoint(d, 0, tree, policy=POLICY, nshards=4)
+            man = json.load(open(os.path.join(final, "manifest.json")))
+            assert man["format"] == CK.MANIFEST_FORMAT
+            assert man["nshards"] == 4
+            for h in range(4):
+                assert os.path.exists(
+                    os.path.join(final, CK._SHARD_FMT.format(h)))
+            # split-stable codecs split across all shards, cusz leaves
+            # stay whole on one owner shard
+            w = man["tensors"]["w"]
+            assert w["codec"] == "cusz" and w["axis"] is None
+            assert len(w["shards"]) == 1
+            m = man["tensors"]["opt::m"]
+            assert m["codec"] == "int8" and m["axis"] is not None
+            assert [s["shard"] for s in m["shards"]] == [0, 1, 2, 3]
+            # every shard header is self-describing
+            for e in man["tensors"].values():
+                for sh in e["shards"]:
+                    assert sh["header"]["codec"] == e["codec"]
+
+    def test_pinned_scale_makes_int8_split_stable(self):
+        """The int8 per-tensor scale must be derived globally, not per
+        slice — otherwise sharded and single-file saves diverge."""
+        x = jnp.asarray(np.linspace(-3, 11, 64 * 32, dtype=np.float32
+                                    ).reshape(64, 32))
+        codec = codecs.get("int8")
+        whole = codec.decode(codec.encode(x))
+        axis = codec.shard_axis(x.shape, 4)
+        parts = codec.encode_parts(x, axis, 4)
+        merged = codecs.concat_containers(parts, axis,
+                                          codec.payload_axes(axis))
+        np.testing.assert_array_equal(np.asarray(whole),
+                                      np.asarray(codec.decode(merged)))
+
+    def test_elastic_restore_with_shardings_is_bitwise(self):
+        tree = _tree()
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh()
+        shardings = jax.tree_util.tree_map(
+            lambda _: NamedSharding(mesh, P()), tree)
+        with tempfile.TemporaryDirectory() as d:
+            CK.save_checkpoint(d, 0, tree, policy=POLICY, nshards=4)
+            host, _ = CK.load_checkpoint(d, tree)
+            wired, _ = CK.load_checkpoint(d, tree, shardings=shardings)
+            _assert_trees_bitwise_equal(host, wired)
+            stats = CK.LAST_RESTORE_STATS
+            assert stats["saved_nshards"] == 4
+            assert stats["wire_leaves"] > 0       # containers moved, not f32
+            assert 0 < stats["wire_bytes"] < stats["raw_bytes"]
+
+    def test_restore_wire_codec_leg(self):
+        """Arming use_restore_compress moves raw leaves over the
+        int8-block wire codec: lossy within scale/2, much smaller."""
+        rng = np.random.default_rng(3)
+        tree = {"w": jnp.asarray(rng.standard_normal((128, 256))
+                                 .astype(np.float32))}
+        with tempfile.TemporaryDirectory() as d:
+            CK.save_checkpoint(d, 0, tree)        # lossless policy
+            plain, _ = CK.load_checkpoint(d, tree)
+            plain_bytes = CK.LAST_RESTORE_STATS["wire_bytes"]
+            with dist_ctx.use_restore_compress("int8-block"):
+                coded, _ = CK.load_checkpoint(d, tree)
+            stats = CK.LAST_RESTORE_STATS
+            assert stats["recoded_leaves"] == 1
+            assert stats["wire_bytes"] < stats["raw_bytes"] / 3
+            a = np.asarray(plain["w"])
+            b = np.asarray(coded["w"])
+            bound = np.abs(a).max() / 127.0 * 0.51
+            assert np.abs(a - b).max() <= bound
+            assert not np.array_equal(a, b)       # genuinely recoded
+            assert plain_bytes == 0               # and off by default
+
+    def test_invalid_restore_codec_rejected(self):
+        with pytest.raises(ValueError, match="unknown compression codec"):
+            with dist_ctx.use_restore_compress("no-such-codec"):
+                pass
+        # non-blockwise registry ids fail at arm time, not mid-restore
+        with pytest.raises(ValueError, match="blockwise"):
+            with dist_ctx.use_restore_compress("cusz"):
+                pass
+
+
+class TestManifestFormatGate:
+    def _v2_checkpoint(self, d, key, value):
+        sd = os.path.join(d, "step_00000003")
+        os.makedirs(sd)
+        codec = codecs.get("lossless")
+        c = codec.pack(codec.encode(value))
+        header, fields = codecs.to_arrays(c)
+        arrays = {f"{key}::__c__::{f}": v for f, v in fields.items()}
+        man = {"step": 3, "format": 2, "policy": "lossless",
+               "tensors": {key: {"codec": "lossless", "version": 1,
+                                 "header": header}}}
+        np.savez(os.path.join(sd, "arrays.npz"), **arrays)
+        with open(os.path.join(sd, "manifest.json"), "w") as f:
+            json.dump(man, f)
+
+    def test_v2_still_loads_behind_gate(self):
+        v = np.arange(12, dtype=np.float32).reshape(3, 4)
+        with tempfile.TemporaryDirectory() as d:
+            self._v2_checkpoint(d, "x", v)
+            out, step = CK.load_checkpoint(
+                d, {"x": jnp.zeros((3, 4), jnp.float32)})
+            assert step == 3
+            np.testing.assert_array_equal(np.asarray(out["x"]), v)
+            assert CK.LAST_RESTORE_STATS["format"] == 2
+
+    def test_v1_rejected_with_actionable_error(self):
+        with tempfile.TemporaryDirectory() as d:
+            sd = os.path.join(d, "step_00000000")
+            os.makedirs(sd)
+            with open(os.path.join(sd, "manifest.json"), "w") as f:
+                json.dump({"step": 0, "format": 1, "tensors": {}}, f)
+            with pytest.raises(ValueError, match="predates"):
+                CK.load_checkpoint(d, {})
+
+    def test_future_format_rejected(self):
+        with tempfile.TemporaryDirectory() as d:
+            sd = os.path.join(d, "step_00000000")
+            os.makedirs(sd)
+            with open(os.path.join(sd, "manifest.json"), "w") as f:
+                json.dump({"step": 0, "format": 4, "tensors": {}}, f)
+            with pytest.raises(ValueError, match="supports formats 2"):
+                CK.load_checkpoint(d, {})
+
+    def test_latest_step_ignores_tmp_dirs(self):
+        with tempfile.TemporaryDirectory() as d:
+            os.makedirs(os.path.join(d, ".tmp_step_00000009"))
+            assert CK.latest_step(d) is None
+            CK.save_checkpoint(d, 4, {"x": jnp.zeros(3)})
+            assert CK.latest_step(d) == 4

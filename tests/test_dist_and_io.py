@@ -125,9 +125,11 @@ class TestCheckpoint:
             assert man["tensors"]["opt::m"]["codec"] == "int8"
             assert man["tensors"]["bias"]["codec"] == "lossless"  # too small
             assert man["tensors"]["step"]["codec"] == "lossless"  # not float
+            assert man["format"] == CK.MANIFEST_FORMAT
             for e in man["tensors"].values():      # self-describing headers
-                assert e["header"]["codec"] == e["codec"]
-                assert "dtype" in e["header"] and "shape" in e["header"]
+                for sh in e["shards"]:
+                    assert sh["header"]["codec"] == e["codec"]
+                    assert "dtype" in sh["header"] and "shape" in sh["header"]
             out, _ = CK.load_checkpoint(d, tree)
         np.testing.assert_array_equal(np.asarray(out["step"]),
                                       np.asarray(tree["step"]))
