@@ -1,0 +1,86 @@
+"""Prefill->decode KV handoff wire accounting + wall time (the serve
+reshard leg of "compressed all-to-all beyond MoE").
+
+For a real reduced-model prefill, measures what crossing the
+prefill->decode mesh boundary costs per wire codec:
+
+  * ``raw``        — the bf16 bytes the uncompressed reshard would ship
+    (lossless containers; the baseline row).
+  * ``int8-block`` — blockwise-quantized payloads.  From a compressed
+    prefill this is a pure payload re-slice (``adopt`` path: the decode
+    side takes the payload as its in-memory QuantKV with no f32 round
+    trip); from a raw prefill it is quantize-on-the-wire (FZ-GPU-style
+    throughput codec).
+  * ``cusz``       — the full dual-quant + Huffman pipeline per slab
+    (the host-offload/storage leg).
+
+Writes ``BENCH_reshard.json`` records ``{wire, source, wire_bytes,
+raw_bf16_bytes, ratio, encode_s, reshard_s, containers}``.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.models import model as M
+from repro.serve.engine import (LAST_HANDOFF_STATS, ServeConfig,
+                                encode_handoff, prefill, reshard_caches)
+from .common import emit, write_json
+
+JSON_NAME = "BENCH_reshard.json"
+
+WIRES = ("lossless", "int8-block", "cusz")
+
+
+def _sweep(cfg, params, prompt, scfg, source: str, records: list) -> None:
+    _, caches, plen = prefill(params, cfg, prompt, scfg)
+    jax.block_until_ready(jax.tree_util.tree_leaves(caches))
+    for wire in WIRES:
+        if source == "quantkv" and wire == "lossless":
+            continue                     # raw baseline comes from the raw run
+        t0 = time.perf_counter()
+        h = encode_handoff(caches, cfg, scfg, wire=wire, plen=plen)
+        t_enc = time.perf_counter() - t0
+        stats = dict(LAST_HANDOFF_STATS)
+        t1 = time.perf_counter()
+        out = reshard_caches(h, cfg, scfg)
+        jax.block_until_ready(jax.tree_util.tree_leaves(out))
+        t_rs = time.perf_counter() - t1
+        name = "raw" if wire == "lossless" else wire
+        rec = {"wire": name, "source": source,
+               "wire_bytes": int(stats["wire_bytes"]),
+               "raw_bf16_bytes": int(stats["raw_bf16_bytes"]),
+               "ratio": round(stats["raw_bf16_bytes"]
+                              / max(1, stats["wire_bytes"]), 3),
+               "encode_s": round(t_enc, 4), "reshard_s": round(t_rs, 4),
+               "containers": int(stats["containers"])}
+        records.append(rec)
+        emit(f"reshard_{source}_{name}", t_enc + t_rs,
+             f"wire={rec['wire_bytes']}B ratio={rec['ratio']}")
+
+
+def main(small: bool = False, json_dir: str = ".") -> None:
+    records: list = []
+    cfg = configs.reduced("qwen2.5-3b", n_periods=1)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    B, plen = (2, 24) if small else (4, 96)
+    s_max = 256 if small else 1024
+    rng = np.random.default_rng(0)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab, (B, plen))
+                         .astype(np.int32))
+    # raw (uncompressed bf16) prefill: the wire codecs quantize on the wire
+    _sweep(cfg, params, prompt,
+           ServeConfig(s_max=s_max, compressed_kv=False), "raw", records)
+    # compressed prefill: int8-block is a pure payload adopt (no f32)
+    _sweep(cfg, params, prompt,
+           ServeConfig(s_max=s_max, compressed_kv=True), "quantkv", records)
+    write_json(os.path.join(json_dir, JSON_NAME), records)
+
+
+if __name__ == "__main__":
+    main()

@@ -10,6 +10,7 @@ seconds, GBps}).
   beyond   -> grad_compression    §Roofline-> roofline (from dry-run JSONs)
   beyond   -> checkpoint (sync/async/sharded write path per codec)
   beyond   -> serve_latency (compressed-KV decode per token)
+  beyond   -> reshard (prefill->decode handoff wire bytes per codec)
 
 CLI:
   --only MOD[,MOD]   run a subset (e.g. --only throughput)
@@ -25,7 +26,7 @@ import sys
 import traceback
 
 from . import (checkpoint, chunksize, codebook, grad_compression,
-               huffman_repr, quality, rate_distortion, roofline,
+               huffman_repr, quality, rate_distortion, reshard, roofline,
                serve_latency, throughput)
 
 MODULES = [
@@ -38,6 +39,7 @@ MODULES = [
     ("grad_compression", grad_compression),
     ("checkpoint", checkpoint),
     ("serve_latency", serve_latency),
+    ("reshard", reshard),
     ("roofline", roofline),
 ]
 

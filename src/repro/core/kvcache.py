@@ -12,7 +12,7 @@ the cache there — DESIGN.md §7).
 from __future__ import annotations
 
 import warnings
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -50,11 +50,16 @@ def kv_update_block(qkv: QuantKV, new: jax.Array, pos, seq_axis: int) -> QuantKV
     """Write `new` (one token slot, already sized [..,1,..] on seq_axis)
     into the quantized cache at `pos`.  The owning SEQ_BLOCK's scale is
     monotonically widened (never shrunk) so previously written tokens keep
-    their bound."""
+    their bound.  Widening is per scale coordinate — the scale tensor has
+    one entry per (batch, head, dim) coordinate, so one coordinate's large
+    value must not widen (and thus requantize-destroy) the others; this
+    also keeps the all-zero s_max-extension blocks at the 1e-30 floor
+    until *their own* coordinate sees a value."""
     blk = pos // SEQ_BLOCK
     old_scale = jax.lax.dynamic_index_in_dim(qkv.scale, blk, seq_axis,
                                              keepdims=True)
-    need = jnp.max(jnp.abs(new)).astype(jnp.float32) / _QMAX
+    need = jnp.max(jnp.abs(new), axis=seq_axis,
+                   keepdims=True).astype(jnp.float32) / _QMAX
     new_scale = jnp.maximum(old_scale, jnp.maximum(need, 1e-30))
     # requantize the block's existing tokens under the widened scale so
     # their dequantized values are preserved (bound becomes new_scale/2)
@@ -116,3 +121,155 @@ def kv_offload_restore(packed: dict, eb: float, shape, cfg,
 def error_bound(qkv: QuantKV) -> jax.Array:
     """Per-block abs error bound = scale/2 (the paper's eb semantics)."""
     return qkv.scale / 2.0
+
+
+# ---------------------------------------------------------------------------
+# Prefill -> decode handoff wire format: per-seq-slab registry Containers.
+#
+# The disaggregated-serving reshard moves each cache tensor as a tuple of
+# self-describing Containers sliced along the sequence axis (one slab per
+# SEQ_BLOCK group by default).  The wire codec is a registry choice:
+#
+#   * "int8-block" (default): split-stable blockwise quantization — a
+#     QuantKV source is re-sliced in *payload space* (no dequantize) and
+#     the decode side adopts the payload directly as its in-memory
+#     QuantKV cache, so compressed bytes cross the boundary with zero
+#     f32 round trip.
+#   * "cusz": the full dual-quant + Huffman pipeline per slab (the
+#     host-offload / storage leg; each slab container is independent).
+#   * "lossless": raw bytes (the baseline the benchmarks compare against).
+# ---------------------------------------------------------------------------
+
+#: default cusz wire configuration for cache slabs: a serving-tolerance
+#: value-range-relative bound and full outlier capacity (never overflows)
+CUSZ_WIRE_CFG = {"eb": 1e-2, "eb_mode": "valrel", "outlier_frac": 1.0}
+
+
+def _wire_codec(wire: str, seq_axis: int, wire_cfg: Optional[dict] = None):
+    from repro import codecs
+
+    if wire == "cusz":
+        return codecs.get("cusz", **(wire_cfg or CUSZ_WIRE_CFG))
+    if wire == "lossless":
+        return codecs.get("lossless")
+    return codecs.get_block_codec(wire, axis=seq_axis, block=SEQ_BLOCK)
+
+
+def _n_slabs(length: int, nslabs: Optional[int]) -> int:
+    if nslabs is None:
+        nslabs = max(1, length // SEQ_BLOCK)
+    assert length % nslabs == 0, (length, nslabs)
+    return nslabs
+
+
+def _slice_axis(x, axis: int, start: int, stop: int):
+    sl = [slice(None)] * x.ndim
+    sl[axis] = slice(start, stop)
+    return x[tuple(sl)]
+
+
+def _encode_slab(codec, slab, seq_axis: int):
+    """Encode one slab through a whole-slab (non-blockwise) codec,
+    flattened to [tokens, features] first: the chunked-transform codecs
+    pad every dim to Lorenzo-block multiples, and a cache's small
+    head/dim axes would blow that padding up 4-8x.  The slab's logical
+    shape rides in the header (`kv_shape`) so the decode side restores
+    it."""
+    feat = 1
+    for s in slab.shape[seq_axis + 1:]:
+        feat *= int(s)
+    flat = slab.reshape(-1, feat) if feat > 1 else slab.reshape(-1)
+    c = codec.encode(flat)
+    return c.replace(header=c.header.with_params(
+        kv_shape=tuple(int(s) for s in slab.shape)))
+
+
+def kv_wire_encode(x, seq_axis: int, *, wire: str = "int8-block",
+                   nslabs: Optional[int] = None,
+                   source_dtype=jnp.bfloat16,
+                   wire_cfg: Optional[dict] = None,
+                   pack: bool = True) -> Tuple:
+    """Encode one cache tensor (raw array or in-memory ``QuantKV``) into
+    per-seq-slab Containers.  Returns a tuple of (packed) containers whose
+    seq-axis shapes sum to the source length.  With the int8-block wire a
+    QuantKV source never leaves payload space, and a raw source encodes
+    bit-identically to whole-tensor ``kv_quantize`` (slab boundaries are
+    SEQ_BLOCK-aligned, so no scale block straddles a slice)."""
+    from repro import codecs
+
+    codec = _wire_codec(wire, seq_axis, wire_cfg)
+    if isinstance(x, QuantKV):
+        if wire == "int8-block":
+            n = _n_slabs(x.q.shape[seq_axis], nslabs)
+            step = x.q.shape[seq_axis] // n
+            assert step % SEQ_BLOCK == 0, (x.q.shape, seq_axis, n)
+            sstep = step // SEQ_BLOCK
+            parts = []
+            for i in range(n):
+                q = _slice_axis(x.q, seq_axis, i * step, (i + 1) * step)
+                scale = _slice_axis(x.scale, seq_axis, i * sstep,
+                                    (i + 1) * sstep)
+                header = codecs.make_header(
+                    codec.name, codec.version,
+                    jax.ShapeDtypeStruct(q.shape, source_dtype),
+                    axis=seq_axis, block=SEQ_BLOCK)
+                parts.append(codecs.Container(header,
+                                              {"q": q, "scale": scale}))
+            return tuple(codec.pack(p) for p in parts) if pack \
+                else tuple(parts)
+        x = kv_dequantize(x, seq_axis, dtype=source_dtype)
+
+    n = _n_slabs(x.shape[seq_axis], nslabs)
+    if wire == "int8-block":
+        assert (x.shape[seq_axis] // n) % SEQ_BLOCK == 0, \
+            (x.shape, seq_axis, n)
+        parts = codec.encode_parts(x, seq_axis, n)
+    else:
+        step = x.shape[seq_axis] // n
+        parts = [_encode_slab(codec,
+                              _slice_axis(x, seq_axis, i * step,
+                                          (i + 1) * step), seq_axis)
+                 for i in range(n)]
+    return tuple(codec.pack(p) for p in parts) if pack else tuple(parts)
+
+
+def kv_wire_adopt(parts: Sequence, seq_axis: int) -> QuantKV:
+    """Adopt int8-block wire containers directly as the in-memory QuantKV
+    cache: the quantized payload (q int8 + f32 block scales) is
+    concatenated along the seq axis and becomes the cache — no dequantize
+    and no re-quantization round trip.  Raises for non-int8-block wires
+    (those must go through ``kv_wire_restore``)."""
+    for p in parts:
+        if p.header.codec != "int8-block":
+            raise ValueError(
+                f"cannot adopt codec {p.header.codec!r} as QuantKV; only "
+                f"the int8-block wire payload IS the in-memory format")
+    q = jnp.concatenate([jnp.asarray(p.payload["q"]) for p in parts],
+                        axis=seq_axis)
+    scale = jnp.concatenate([jnp.asarray(p.payload["scale"])
+                             for p in parts], axis=seq_axis)
+    return QuantKV(q, scale)
+
+
+def kv_slab_shape(part) -> Tuple[int, ...]:
+    """Logical (un-flattened) slab shape of a wire container."""
+    kv_shape = part.header.param("kv_shape")
+    return tuple(kv_shape) if kv_shape is not None else part.header.shape
+
+
+def kv_wire_restore(parts: Sequence, seq_axis: int,
+                    dtype=jnp.bfloat16) -> jax.Array:
+    """Decode wire containers back to a dense cache tensor (any codec),
+    concatenated along the seq axis."""
+    from repro import codecs
+
+    vals = []
+    for p in parts:
+        v = codecs.decode(p).reshape(kv_slab_shape(p))
+        vals.append(v.astype(dtype))
+    return jnp.concatenate(vals, axis=seq_axis)
+
+
+def kv_wire_nbytes(parts: Sequence) -> int:
+    """Bytes the containers occupy on the wire (packed payload bytes)."""
+    return sum(p.nbytes for p in parts)

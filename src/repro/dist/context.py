@@ -40,6 +40,7 @@ _dp_override_stack: List[Tuple[str, ...]] = []
 _weight_compress_stack: List[Optional[str]] = []   # armed codec names
 _a2a_compress_stack: List[Optional[str]] = []
 _restore_compress_stack: List[Optional[str]] = []
+_kv_reshard_stack: List[Optional[str]] = []
 
 
 def _is_spec(x) -> bool:
@@ -233,6 +234,46 @@ def restore_codec() -> Optional[str]:
     """Registry name of the armed elastic-restore wire codec (None = off,
     the default: restore is bit-exact w.r.t. the stored containers)."""
     return _restore_compress_stack[-1] if _restore_compress_stack else None
+
+
+def use_kv_reshard_compress(active):
+    """Arm the prefill->decode KV-cache reshard wire codec: the serve
+    engine's ``encode_handoff`` moves per-SEQ_BLOCK cache slabs across
+    the mesh boundary as this codec's Containers instead of raw bf16.
+    `active`: bool (True = "int8-block"; False/"none" = an explicit
+    disarm, which the handoff resolves to the "lossless" raw-bytes wire)
+    or a registry name — a blockwise wire codec ("int8-block", adopted
+    directly as the in-memory QuantKV on the decode side), "cusz" (the
+    host-offload/storage leg) or "lossless".  Validated at arm time like
+    the a2a/restore hooks: an id that is neither blockwise-configurable
+    nor one of the whole-slab wire codecs fails here, not mid-handoff."""
+    name = _codec_name(active)
+    if name is not None and name not in ("cusz", "lossless"):
+        from repro import codecs
+        codecs.get_block_codec(name, axis=0, block=8)
+    return _pushed(_kv_reshard_stack, name)
+
+
+def kv_reshard_codec() -> Optional[str]:
+    """Registry name of the armed prefill->decode reshard wire codec.
+    None = nothing armed (the handoff falls back to its "int8-block"
+    default).  An *explicit* disarm (``use_kv_reshard_compress(False)``)
+    resolves to "lossless": unlike the a2a/weight hooks, the handoff
+    always needs some wire format, so "off" means raw bytes — never a
+    silent fall-through to a lossy codec."""
+    if not _kv_reshard_stack:
+        return None
+    return _kv_reshard_stack[-1] or "lossless"
+
+
+def resolve_sharding(mesh, shape, *spec_elems) -> NamedSharding:
+    """Public spec-mini-language resolver for host-side placement
+    (``jax.device_put`` / ``out_shardings``): same semantics as
+    ``constrain`` — ``"dp"`` expansion, absent-axis dropping and per-dim
+    divisibility fallback — but returns the ``NamedSharding`` instead of
+    constraining a traced value.  The serve reshard uses this to place
+    adopted cache payloads under the decode mesh."""
+    return NamedSharding(mesh, _resolve_spec(spec_elems, tuple(shape), mesh))
 
 
 def _drop_lead(spec: P) -> P:

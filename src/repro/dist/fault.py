@@ -16,9 +16,13 @@ class StragglerDetector:
     """Flag abnormally slow steps against an EMA baseline.
 
     The first ``warmup`` observations only establish the baseline and are
-    never flagged.  A flagged step does not poison the baseline (its
-    duration is excluded from the EMA), so a single straggler recovers
-    immediately on the next normal step.
+    never flagged.  The warmup baseline is the **median** of the warmup
+    window, not an EMA over it: a straggler landing *during* warmup
+    (steps 2..warmup) must not be folded into the baseline, or it would
+    inflate it and suppress all later detection.  After warmup a flagged
+    step does not poison the baseline either (its duration is excluded
+    from the EMA), so a single straggler recovers immediately on the next
+    normal step.
     """
 
     def __init__(self, threshold: float = 2.0, warmup: int = 5,
@@ -30,21 +34,23 @@ class StragglerDetector:
         self.ema: Optional[float] = None
         self.n_observed = 0
         self.n_flagged = 0
+        self._warmup_durations: list = []
 
     def observe(self, step: int, duration_s: float) -> bool:
         """Record one step's wall-time; returns True iff it straggled."""
         duration_s = float(duration_s)
         self.n_observed += 1
-        if self.ema is None:
-            self.ema = duration_s
+        if self.ema is None or self.n_observed <= self.warmup:
+            # warmup: outlier-robust baseline (median of the window)
+            self._warmup_durations.append(duration_s)
+            self.ema = float(np.median(self._warmup_durations))
             return False
         if self.ema <= 1e-12:
             # degenerate ~0 baseline (coarse timers): reseed instead of
             # flagging, or every later step would flag with the EMA frozen
             self.ema = duration_s
             return False
-        slow = (self.n_observed > self.warmup
-                and duration_s > self.threshold * self.ema)
+        slow = duration_s > self.threshold * self.ema
         if slow:
             self.n_flagged += 1
         else:

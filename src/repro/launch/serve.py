@@ -1,7 +1,12 @@
-"""Serving launcher: batched prefill + decode loop.
+"""Serving launcher: batched prefill + decode loop, optionally split
+into disaggregated prefill/decode phases with the compressed KV handoff.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --reduced \
         --batch 4 --prompt-len 32 --new-tokens 32 --compressed-kv
+
+    # disaggregated: prefill -> Containers -> reshard -> decode
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --reduced \
+        --compressed-kv --disaggregate --wire-codec int8-block
 """
 from __future__ import annotations
 
@@ -14,7 +19,9 @@ import numpy as np
 
 from repro import configs
 from repro.models import model as M
-from repro.serve.engine import ServeConfig, generate
+from repro.serve.engine import (LAST_HANDOFF_STATS, LAST_RESHARD_STATS,
+                                ServeConfig, decode_tokens, encode_handoff,
+                                generate, prefill, reshard_caches)
 
 
 def main():
@@ -26,6 +33,14 @@ def main():
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--s-max", type=int, default=256)
     ap.add_argument("--compressed-kv", action="store_true")
+    ap.add_argument("--kv-codec", default="int8-block",
+                    help="registry id of the in-memory KV codec")
+    ap.add_argument("--disaggregate", action="store_true",
+                    help="run prefill and decode as separate phases with "
+                         "the compressed Container handoff between them")
+    ap.add_argument("--wire-codec", default="int8-block",
+                    choices=["int8-block", "cusz", "lossless"],
+                    help="prefill->decode handoff wire codec")
     ap.add_argument("--temperature", type=float, default=0.0)
     args = ap.parse_args()
 
@@ -36,13 +51,29 @@ def main():
                                       (args.batch, args.prompt_len))
                          .astype(np.int32))
     scfg = ServeConfig(s_max=args.s_max, compressed_kv=args.compressed_kv,
+                       kv_codec=args.kv_codec,
                        temperature=args.temperature)
     t0 = time.perf_counter()
-    toks = generate(params, cfg, prompt, args.new_tokens, scfg)
+    if args.disaggregate:
+        last, caches, plen = prefill(params, cfg, prompt, scfg)
+        handoff = encode_handoff(caches, cfg, scfg, plen=plen,
+                                 wire=args.wire_codec)
+        caches = reshard_caches(handoff, cfg, scfg)
+        toks = decode_tokens(params, cfg, scfg, last, caches,
+                             handoff.plen, args.new_tokens)
+    else:
+        toks = generate(params, cfg, prompt, args.new_tokens, scfg)
     jax.block_until_ready(toks)
     dt = time.perf_counter() - t0
     print(f"arch={cfg.name} batch={args.batch} new={args.new_tokens} "
           f"compressed_kv={args.compressed_kv}")
+    if args.disaggregate:
+        hs, rs = LAST_HANDOFF_STATS, LAST_RESHARD_STATS
+        print(f"handoff wire={hs['wire']} containers={hs['containers']} "
+              f"wire_bytes={hs['wire_bytes']} "
+              f"raw_bf16_bytes={hs['raw_bf16_bytes']} "
+              f"adopted_quantkv={rs['adopted_quantkv']} "
+              f"decoded={rs['decoded']}")
     print(f"generated {toks.shape} in {dt:.2f}s "
           f"({args.batch * args.new_tokens / dt:.1f} tok/s incl. compile)")
     print("first sequence:", np.asarray(toks)[0].tolist())

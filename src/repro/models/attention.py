@@ -242,11 +242,13 @@ def mla_forward(p, cfg: ModelConfig, x: jax.Array, pos: jax.Array):
     return out, jnp.concatenate([latent, k_rope[:, :, 0, :]], axis=-1)
 
 
-def mla_decode(p, cfg: ModelConfig, x: jax.Array, cache: jax.Array,
-               cache_len: jax.Array):
+def mla_decode(p, cfg: ModelConfig, x: jax.Array, cache,
+               cache_len: jax.Array, compressed: bool = False):
     """cache: [B, Smax, kv_lora+rope] latent cache (MLA's whole point: the
-    per-token cache is ~576 floats, already 'compressed'; cuSZ int8 can be
-    layered on top via serve config)."""
+    per-token cache is ~576 floats, already 'compressed'), or its QuantKV
+    form when `compressed` — the same blockwise-int8 codec the GQA cache
+    uses, layered on top of the latent (PREQUANT on the already-low-rank
+    entries; eb = scale/2 per coordinate)."""
     m = cfg.mla
     dt = x.dtype
     B = x.shape[0]
@@ -260,9 +262,16 @@ def mla_decode(p, cfg: ModelConfig, x: jax.Array, cache: jax.Array,
     latent, k_rope = jnp.split(kv_a, [m.kv_lora_rank], axis=-1)
     k_rope = apply_rope(k_rope[:, :, None, :], pos, cfg.rope_theta)[:, :, 0, :]
     entry = jnp.concatenate([latent, k_rope], axis=-1)
-    cache = jax.lax.dynamic_update_index_in_dim(cache, entry[:, 0], cache_len, 1)
+    if compressed:
+        cache = KVC.kv_update_block(cache, entry, cache_len, seq_axis=1)
+        cache_f = KVC.kv_dequantize(cache, seq_axis=1, dtype=dt)
+    else:
+        cache = jax.lax.dynamic_update_index_in_dim(cache, entry[:, 0],
+                                                    cache_len, 1)
+        cache_f = cache
 
-    lat_c, kr_c = cache[..., :m.kv_lora_rank], cache[..., m.kv_lora_rank:]
+    lat_c = cache_f[..., :m.kv_lora_rank]
+    kr_c = cache_f[..., m.kv_lora_rank:]
     k_nope = jnp.einsum("bsr,rhe->bshe", lat_c, p["wk_b"].astype(dt))
     v = jnp.einsum("bsr,rhe->bshe", lat_c, p["wv_b"].astype(dt))
     scale = 1.0 / np.sqrt(m.qk_nope_dim + m.qk_rope_dim)
@@ -271,7 +280,7 @@ def mla_decode(p, cfg: ModelConfig, x: jax.Array, cache: jax.Array,
     s = s + jnp.einsum("bqhe,bse->bqhs", q_rope, kr_c,
                        preferred_element_type=jnp.float32)
     s = s * scale
-    Smax = cache.shape[1]
+    Smax = cache_f.shape[1]
     valid = jnp.arange(Smax) <= cache_len
     s = jnp.where(valid[None, None, None, :], s, -jnp.inf)
     pattn = jax.nn.softmax(s, axis=-1)

@@ -179,8 +179,14 @@ def init_caches(cfg: ModelConfig, batch: int, s_max: int,
         if kind.startswith("attn"):
             if cfg.mla:
                 m = cfg.mla
-                entries.append(jnp.zeros(
-                    (nP, batch, s_max, m.kv_lora_rank + m.qk_rope_dim), dtype))
+                R = m.kv_lora_rank + m.qk_rope_dim
+                if compressed_kv:
+                    entries.append(KVC.QuantKV(
+                        jnp.zeros((nP, batch, s_max, R), jnp.int8),
+                        jnp.full((nP, batch, s_max // KVC.SEQ_BLOCK, R),
+                                 1e-30, jnp.float32)))
+                else:
+                    entries.append(jnp.zeros((nP, batch, s_max, R), dtype))
             elif compressed_kv:
                 kq = KVC.QuantKV(
                     jnp.zeros((nP, batch, s_max, cfg.n_kv_heads, cfg.head_dim),
@@ -220,7 +226,8 @@ def decode_step(params, cfg: ModelConfig, token: jax.Array,
             c = period_caches[i]
             if kind.startswith("attn"):
                 if cfg.mla:
-                    a, nc = attn.mla_decode(p["attn"], cfg, h, c, cache_len)
+                    a, nc = attn.mla_decode(p["attn"], cfg, h, c, cache_len,
+                                            compressed=compressed_kv)
                 else:
                     ck, cv = c
                     a, nck, ncv = attn.gqa_decode(

@@ -84,8 +84,12 @@ class Trainer:
                     if last_good is not None:
                         params, opt = last_good
                     continue
+                # n_flagged rides in the step log: the first concrete
+                # hook for straggler *mitigation* (rebalancing decisions
+                # key off the running flag count, not one step's bool)
                 self.history.append({"step": step, "loss": float(loss),
-                                     "dt": dt, "slow": bool(slow)})
+                                     "dt": dt, "slow": bool(slow),
+                                     "n_flagged": self.straggler.n_flagged})
                 if step % 20 == 0:
                     last_good = (params, opt)
                 if lc.checkpoint_dir and (step + 1) % lc.checkpoint_every == 0:

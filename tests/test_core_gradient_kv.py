@@ -80,3 +80,75 @@ class TestKVCache:
         raw = k.size * 2
         comp = qkv.q.size * 1 + qkv.scale.size * 4
         assert raw / comp > 1.9
+
+    def test_update_widens_per_coordinate_not_globally(self):
+        """Regression (ISSUE satellite): kv_update_block used to widen
+        the block scale by the *global* amax of the new token, so one
+        coordinate's large value requantized (and destroyed) every other
+        coordinate's already-written tokens.  Widening is per scale
+        coordinate: an untouched coordinate keeps its tight scale and its
+        tokens survive bit-exactly."""
+        cache = np.zeros((1, 256, 2), np.float32)
+        cache[0, :8, 0] = np.linspace(1e-3, 2e-3, 8)   # tiny coord 0
+        cache[0, :8, 1] = np.linspace(0.5, 1.0, 8)     # large coord 1
+        qkv = KV.kv_quantize(jnp.asarray(cache), seq_axis=1)
+        before = np.asarray(KV.kv_dequantize(qkv, 1, jnp.float32))
+        new = jnp.asarray([[[1e-3, 100.0]]], jnp.float32)  # huge coord 1
+        qkv2 = KV.kv_update_block(qkv, new, pos=8, seq_axis=1)
+        after = np.asarray(KV.kv_dequantize(qkv2, 1, jnp.float32))
+        # coord 0's scale must not have widened -> its tokens unchanged
+        np.testing.assert_array_equal(after[0, :8, 0], before[0, :8, 0])
+        assert float(np.asarray(qkv2.scale)[0, 0, 0]) == \
+            float(np.asarray(qkv.scale)[0, 0, 0])
+        # the written slot round-trips within its own (widened) bound
+        eb1 = float(np.asarray(qkv2.scale)[0, 0, 1]) / 2
+        assert abs(after[0, 8, 1] - 100.0) <= eb1 + 1e-6
+        assert abs(after[0, 8, 0] - 1e-3) <= \
+            float(np.asarray(qkv2.scale)[0, 0, 0]) / 2 + 1e-9
+
+    def test_zero_extension_blocks_stay_at_floor_until_written(self):
+        """The all-zero s_max extension quantizes to the 1e-30 scale
+        floor; writing the first real token into a zero block sets that
+        coordinate's scale from the token and the old zeros requantize
+        to exact zeros (no garbage from the degenerate old scale)."""
+        cache = np.zeros((1, 256, 4), np.float32)
+        cache[0, :100] = np.random.default_rng(0).standard_normal((100, 4))
+        qkv = KV.kv_quantize(jnp.asarray(cache), seq_axis=1)
+        # block 1 (positions 128..255) is all zeros -> floor scale
+        assert (np.asarray(qkv.scale)[0, 1] == 1e-30).all()
+        new = jnp.full((1, 1, 4), 3.0, jnp.float32)
+        qkv2 = KV.kv_update_block(qkv, new, pos=130, seq_axis=1)
+        after = np.asarray(KV.kv_dequantize(qkv2, 1, jnp.float32))
+        np.testing.assert_allclose(after[0, 130], 3.0, atol=3.0 / 254 + 1e-6)
+        # the rest of the zero block stays exactly zero
+        mask = np.ones(256, bool); mask[130] = False
+        np.testing.assert_array_equal(after[0, 128:][mask[128:]], 0.0)
+        # and a zero token into a zero block keeps the floor (no NaN/Inf)
+        qkv3 = KV.kv_update_block(qkv, jnp.zeros((1, 1, 4), jnp.float32),
+                                  pos=200, seq_axis=1)
+        assert np.isfinite(np.asarray(qkv3.scale)).all()
+        assert (np.asarray(KV.kv_dequantize(qkv3, 1, jnp.float32)) ==
+                np.asarray(KV.kv_dequantize(qkv, 1, jnp.float32))).all()
+
+    def test_misaligned_prompt_tail_block_survives_decode_writes(self):
+        """A prompt tail that doesn't align to SEQ_BLOCK shares its block
+        with the zero extension; decode writes into that partial block
+        must keep the prompt tokens within their quantization bound."""
+        plen = 100                       # partial block 0..127
+        cache = np.zeros((1, 256, 4), np.float32)
+        vals = np.random.default_rng(1).standard_normal((plen, 4))
+        cache[0, :plen] = vals
+        qkv = KV.kv_quantize(jnp.asarray(cache), seq_axis=1)
+        before = np.asarray(KV.kv_dequantize(qkv, 1, jnp.float32))
+        # write decode tokens at plen..plen+3 (same block as the tail)
+        for i in range(4):
+            tok = jnp.asarray(
+                np.random.default_rng(2 + i).standard_normal((1, 1, 4))
+                .astype(np.float32))
+            qkv = KV.kv_update_block(qkv, tok, pos=plen + i, seq_axis=1)
+        after = np.asarray(KV.kv_dequantize(qkv, 1, jnp.float32))
+        eb = np.asarray(KV.error_bound(qkv))[0, 0]     # block 0, per coord
+        # prompt tokens in the partial block: still within 2x the final
+        # (possibly widened) per-coordinate bound
+        err = np.abs(after[0, :plen] - before[0, :plen])
+        assert (err <= 2 * eb[None, :] + 1e-9).all()

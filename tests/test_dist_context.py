@@ -172,6 +172,45 @@ class TestStraggler:
         assert det.ema == pytest.approx(0.1)         # outlier not absorbed
         assert det.observe(2, 0.1) is False
 
+    def test_warmup_straggler_does_not_poison_baseline(self):
+        """Regression (ISSUE satellite): a straggler landing during
+        warmup (steps 2..warmup) used to be EMA-folded into the baseline
+        and suppress all later detection.  The warmup baseline is the
+        median of the window, so one outlier leaves it intact and a
+        post-warmup 3x step still flags."""
+        det = fault.StragglerDetector(threshold=2.0, warmup=5, alpha=0.2)
+        for i, d in enumerate([0.1, 0.1, 10.0, 0.1, 0.1]):  # straggler @2
+            assert det.observe(i, d) is False        # warmup never flags
+        assert det.ema == pytest.approx(0.1)         # robust baseline
+        assert det.observe(5, 0.3) is True           # 3x baseline flags
+        assert det.n_flagged == 1
+
+    def test_warmup_majority_slow_is_the_baseline(self):
+        """The median tracks the *typical* step: if most warmup steps are
+        slow, that IS the baseline (not treated as outliers)."""
+        det = fault.StragglerDetector(threshold=2.0, warmup=4)
+        for i, d in enumerate([1.0, 1.1, 0.9, 1.0]):
+            det.observe(i, d)
+        assert det.ema == pytest.approx(1.0, rel=0.1)
+        assert det.observe(4, 1.2) is False
+
+    def test_trainer_step_log_surfaces_n_flagged(self):
+        """The trainer's history records the running straggler count —
+        the hook straggler mitigation keys off."""
+        from repro import configs
+        from repro.models.config import ModelConfig  # noqa: F401
+        from repro.train.trainer import LoopConfig, Trainer
+        from repro.train.train_step import TrainConfig
+        from repro.io.checkpoint import CheckpointPolicy
+
+        cfg = configs.reduced("qwen2.5-3b", n_periods=1)
+        tr = Trainer(cfg, TrainConfig(), LoopConfig(
+            steps=3, batch=2, seq=16, checkpoint_dir=None,
+            checkpoint_policy=CheckpointPolicy()))
+        hist = tr.run()
+        assert hist and all("n_flagged" in h for h in hist)
+        assert hist[-1]["n_flagged"] == tr.straggler.n_flagged
+
     def test_loss_is_bad(self):
         assert fault.loss_is_bad(float("nan"))
         assert fault.loss_is_bad(jnp.float32(-np.inf))

@@ -176,6 +176,77 @@ print("KV_SHARD_OK", err)
 """
 
 
+RESHARD_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro import configs
+from repro.dist import sharding as SH
+from repro.dist.context import resolve_sharding, use_mesh
+from repro.models import model as M
+from repro.serve import engine as E
+
+cfg = configs.reduced("qwen2.5-3b", n_periods=1)
+params = M.init_params(jax.random.PRNGKey(0), cfg)
+rng = np.random.default_rng(0)
+prompt = jnp.asarray(rng.integers(0, cfg.vocab, (4, 20)).astype(np.int32))
+scfg = E.ServeConfig(s_max=256, compressed_kv=True,
+                     compute_dtype=jnp.float32)
+
+# single-mesh compressed reference
+ref = np.asarray(E.generate(params, cfg, prompt, 6, scfg))
+
+# prefill mesh: batch over data(4), cache seq over model(2); decode mesh
+# split differently: data(2) x model(4)
+mesh_a = jax.make_mesh((4, 2), ("data", "model"),
+                       axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh_b = jax.make_mesh((2, 4), ("data", "model"),
+                       axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+params_a = jax.device_put(params, SH.param_shardings(params, mesh_a))
+prompt_a = jax.device_put(prompt,
+                          resolve_sharding(mesh_a, prompt.shape, "data"))
+with use_mesh(mesh_a):
+    last, caches, plen = E.prefill(params_a, cfg, prompt_a, scfg)
+    handoff = E.encode_handoff(caches, cfg, scfg, plen=plen)
+hs = dict(E.LAST_HANDOFF_STATS)
+assert hs["wire_bytes"] < hs["raw_bf16_bytes"], hs
+# what crosses the boundary: int8 payloads + f32 block scales, no f32 KV
+for kind, entry in zip(handoff.kinds, handoff.entries):
+    assert kind == "kv", kind
+    for parts in entry:
+        for p in parts:
+            assert p.header.codec == "int8-block"
+            assert np.asarray(p.payload["q"]).dtype == np.int8
+
+params_b = jax.device_put(params, SH.param_shardings(params, mesh_b))
+last_b = jax.device_put(np.asarray(last),
+                        resolve_sharding(mesh_b, last.shape, "data"))
+with use_mesh(mesh_b):
+    caches_b = E.reshard_caches(handoff, cfg, scfg)
+    rs = dict(E.LAST_RESHARD_STATS)
+    # int8-block payload adopted as QuantKV: zero f32 round trip
+    assert rs["adopted_quantkv"] == 2 and rs["decoded"] == 0, rs
+    q = caches_b.entries[0][0].q
+    assert q.dtype == jnp.int8 and q.sharding.mesh.shape == mesh_b.shape
+    toks = np.asarray(E.decode_tokens(params_b, cfg, scfg, last_b,
+                                      caches_b, handoff.plen, 6))
+assert (toks == ref).all(), (toks.tolist(), ref.tolist())
+
+# cusz offload leg: containers cross, decode requantizes under mesh_b
+with use_mesh(mesh_a):
+    h2 = E.encode_handoff(caches, cfg, scfg, wire="cusz", plen=plen)
+assert dict(E.LAST_HANDOFF_STATS)["wire_bytes"] < hs["raw_bf16_bytes"]
+with use_mesh(mesh_b):
+    caches_c = E.reshard_caches(h2, cfg, scfg)
+    assert dict(E.LAST_RESHARD_STATS)["adopted_quantkv"] == 0
+    toks_c = np.asarray(E.decode_tokens(params_b, cfg, scfg, last_b,
+                                        caches_c, plen, 6))
+assert toks_c.shape == ref.shape and (toks_c == ref).mean() > 0.5
+print("RESHARD_OK", hs)
+"""
+
+
 ELASTIC_CKPT_SCRIPT = r"""
 import os, tempfile
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -278,6 +349,19 @@ def test_spmd_8dev_sharded_kv_codec():
     r = _run_subprocess(KV_SHARD_SCRIPT)
     assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
     assert "KV_SHARD_OK" in r.stdout
+
+
+@pytest.mark.slow
+def test_spmd_8dev_prefill_decode_reshard():
+    """Acceptance (ISSUE 5 tentpole): prefill on a (4,2) data/model mesh,
+    the caches cross to a differently-split (2,4) decode mesh as
+    int8-block Containers (adopted directly as QuantKV, zero f32 round
+    trip), and the generated tokens are identical to the single-mesh
+    compressed path; the cusz offload leg decodes+requantizes under the
+    decode mesh."""
+    r = _run_subprocess(RESHARD_SCRIPT)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "RESHARD_OK" in r.stdout
 
 
 @pytest.mark.slow

@@ -1,0 +1,237 @@
+"""Prefill->decode KV handoff tests: the wire-slab codec layer, the
+engine phase split (prefill / encode_handoff / reshard_caches /
+decode_tokens), the cached jitted serve step, and the MLA compressed-KV
+contract.
+
+The 8-fake-device mesh-to-mesh version of the handoff lives in
+``test_multidevice_spmd.py`` (subprocess); these tests cover the same
+machinery single-device, including the property sweep over codec id x
+prefill length x slab split."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import codecs, configs
+from repro.core import kvcache as KVC
+from repro.dist import context as dist_ctx
+from repro.models import model as M
+from repro.serve import engine as E
+
+
+def _cache(plen: int, s_max: int = 512, seed: int = 0,
+           shape=(1, 2, None, 2, 8)):
+    """A synthetic prefill cache buffer: smooth values for the first
+    `plen` positions, the all-zero s_max extension after (exactly what
+    `prefill` hands to the codec)."""
+    rng = np.random.default_rng(seed)
+    full = list(shape)
+    full[2] = s_max
+    x = np.zeros(tuple(full), np.float32)
+    live = np.cumsum(rng.standard_normal(tuple(full[:2] + [plen]
+                                               + full[3:])), axis=2)
+    x[:, :, :plen] = live / max(1.0, np.abs(live).max())
+    return jnp.asarray(x)
+
+
+class TestWireSlabs:
+    @given(st.sampled_from(("int8-block", "cusz")),
+           st.sampled_from((1, 7, 128, 200, 509, 512)),
+           st.sampled_from((1, 2, 4)))
+    @settings(max_examples=8, deadline=None)
+    def test_property_roundtrip_wire_smaller_and_bounded(self, wire, plen,
+                                                         nslabs):
+        """ISSUE satellite: hypothesis over codec id x prefill length x
+        mesh split — wire bytes < raw bf16 bytes and bound-held
+        reconstruction for every combination."""
+        x = _cache(plen)
+        parts = KVC.kv_wire_encode(x, 2, wire=wire, nslabs=nslabs,
+                                   source_dtype=jnp.float32)
+        assert len(parts) == nslabs
+        raw_bf16 = x.size * 2
+        assert KVC.kv_wire_nbytes(parts) < raw_bf16, (wire, plen, nslabs)
+        back = np.asarray(KVC.kv_wire_restore(parts, 2, dtype=jnp.float32))
+        assert back.shape == x.shape
+        if wire == "int8-block":
+            scale = np.concatenate(
+                [np.asarray(p.payload["scale"]) for p in parts], axis=2)
+            tol = np.repeat(scale / 2, KVC.SEQ_BLOCK, axis=2) * 1.001 + 1e-12
+        else:
+            tol = max(float(p.header.param("eb")) for p in parts) \
+                * 1.001 + 1e-12
+        assert (np.abs(back - np.asarray(x)) <= tol).all()
+
+    def test_int8_block_slabs_match_whole_tensor_quantize(self):
+        """Slab boundaries are SEQ_BLOCK-aligned, so per-slab encoding is
+        bit-identical to whole-tensor kv_quantize — the adopt path
+        reproduces the single-mesh QuantKV exactly."""
+        x = _cache(plen=100)
+        ref = KVC.kv_quantize(x, seq_axis=2)
+        for nslabs in (1, 2):
+            parts = KVC.kv_wire_encode(x, 2, wire="int8-block",
+                                       nslabs=nslabs)
+            got = KVC.kv_wire_adopt(parts, 2)
+            np.testing.assert_array_equal(np.asarray(got.q),
+                                          np.asarray(ref.q))
+            np.testing.assert_array_equal(np.asarray(got.scale),
+                                          np.asarray(ref.scale))
+
+    def test_quantkv_source_never_leaves_payload_space(self):
+        """Encoding an already-quantized cache over the int8-block wire
+        re-slices q/scale; adopt returns the identical payload."""
+        qkv = KVC.kv_quantize(_cache(plen=256), seq_axis=2)
+        parts = KVC.kv_wire_encode(qkv, 2, wire="int8-block")
+        for p in parts:
+            assert p.payload["q"].dtype == np.int8
+        got = KVC.kv_wire_adopt(parts, 2)
+        np.testing.assert_array_equal(np.asarray(got.q), np.asarray(qkv.q))
+        np.testing.assert_array_equal(np.asarray(got.scale),
+                                      np.asarray(qkv.scale))
+
+    def test_adopt_rejects_non_blockwise_wire(self):
+        parts = KVC.kv_wire_encode(_cache(64), 2, wire="cusz", nslabs=1)
+        with pytest.raises(ValueError, match="adopt"):
+            KVC.kv_wire_adopt(parts, 2)
+
+    def test_cusz_slabs_flattened_not_padded(self):
+        """The chunked codec sees [tokens, features], so tiny head/dim
+        axes don't blow up Lorenzo-block padding; the logical slab shape
+        rides in the header."""
+        x = _cache(plen=256)
+        parts = KVC.kv_wire_encode(x, 2, wire="cusz", nslabs=2)
+        for p in parts:
+            assert len(p.header.shape) == 2
+            assert KVC.kv_slab_shape(p) == (1, 2, 256, 2, 8)
+
+
+class TestEnginePhases:
+    def _setup(self, compressed=True, arch="qwen2.5-3b"):
+        cfg = configs.reduced(arch, n_periods=1)
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        rng = np.random.default_rng(1)
+        prompt = jnp.asarray(rng.integers(0, cfg.vocab, (2, 12))
+                             .astype(np.int32))
+        scfg = E.ServeConfig(s_max=256, compressed_kv=compressed,
+                             compute_dtype=jnp.float32)
+        return cfg, params, prompt, scfg
+
+    def test_disaggregated_matches_single_mesh(self):
+        """prefill -> Containers -> reshard -> decode produces the exact
+        single-mesh compressed token stream (int8-block adopt path)."""
+        cfg, params, prompt, scfg = self._setup()
+        ref = np.asarray(E.generate(params, cfg, prompt, 6, scfg))
+        last, caches, plen = E.prefill(params, cfg, prompt, scfg)
+        h = E.encode_handoff(caches, cfg, scfg, plen=plen)
+        assert h.wire == "int8-block"
+        assert E.LAST_HANDOFF_STATS["wire_bytes"] \
+            < E.LAST_HANDOFF_STATS["raw_bf16_bytes"]
+        caches2 = E.reshard_caches(h, cfg, scfg)
+        assert E.LAST_RESHARD_STATS["adopted_quantkv"] == 2  # k and v
+        assert E.LAST_RESHARD_STATS["decoded"] == 0          # no f32 trip
+        toks = np.asarray(E.decode_tokens(params, cfg, scfg, last,
+                                          caches2, plen, 6))
+        np.testing.assert_array_equal(toks, ref)
+
+    def test_cusz_wire_leg(self):
+        """Host-offload leg: cusz containers cross, decode side
+        re-quantizes; tokens mostly agree with the adopt path (lossy)."""
+        cfg, params, prompt, scfg = self._setup()
+        ref = np.asarray(E.generate(params, cfg, prompt, 6, scfg))
+        last, caches, plen = E.prefill(params, cfg, prompt, scfg)
+        h = E.encode_handoff(caches, cfg, scfg, wire="cusz", plen=plen)
+        assert E.LAST_HANDOFF_STATS["wire_bytes"] \
+            < E.LAST_HANDOFF_STATS["raw_bf16_bytes"]
+        caches2 = E.reshard_caches(h, cfg, scfg)
+        assert E.LAST_RESHARD_STATS["adopted_quantkv"] == 0
+        toks = np.asarray(E.decode_tokens(params, cfg, scfg, last,
+                                          caches2, plen, 6))
+        assert (toks == ref).mean() > 0.5
+
+    def test_reshard_hook_arms_wire(self):
+        """use_kv_reshard_compress selects the handoff wire ambiently."""
+        cfg, params, prompt, scfg = self._setup()
+        _, caches, plen = E.prefill(params, cfg, prompt, scfg)
+        with dist_ctx.use_kv_reshard_compress("cusz"):
+            h = E.encode_handoff(caches, cfg, scfg, plen=plen)
+        assert h.wire == "cusz"
+        with dist_ctx.use_kv_reshard_compress(True):
+            h = E.encode_handoff(caches, cfg, scfg, plen=plen)
+        assert h.wire == "int8-block"
+        # an explicit disarm means raw bytes, not a lossy fall-through
+        with dist_ctx.use_kv_reshard_compress("cusz"):
+            with dist_ctx.use_kv_reshard_compress(False):
+                h = E.encode_handoff(caches, cfg, scfg, plen=plen)
+        assert h.wire == "lossless"
+        assert E.encode_handoff(caches, cfg, scfg, plen=plen).wire \
+            == "int8-block"
+        assert h.plen == plen
+
+    def test_reshard_hook_validates_at_arm_time(self):
+        with pytest.raises(ValueError):
+            with dist_ctx.use_kv_reshard_compress("zfp"):
+                pass
+        with pytest.raises(ValueError):
+            with dist_ctx.use_kv_reshard_compress("no-such-codec"):
+                pass
+
+    def test_hybrid_state_crosses_as_containers(self):
+        """Mamba/SSD state ships lossless and reassembles exactly."""
+        cfg, params, prompt, scfg = self._setup(arch="jamba-1.5-large-398b")
+        ref = np.asarray(E.generate(params, cfg, prompt, 5, scfg))
+        last, caches, plen = E.prefill(params, cfg, prompt, scfg)
+        h = E.encode_handoff(caches, cfg, scfg, plen=plen)
+        assert "state" in h.kinds and "kv" in h.kinds
+        caches2 = E.reshard_caches(h, cfg, scfg)
+        toks = np.asarray(E.decode_tokens(params, cfg, scfg, last,
+                                          caches2, plen, 5))
+        np.testing.assert_array_equal(toks, ref)
+
+
+class TestServeStepCache:
+    def test_generate_reuses_compiled_step(self):
+        """Regression (ISSUE satellite): `generate` used to call
+        jax.jit(make_serve_step(...)) per invocation, discarding the
+        compiled step; now one trace serves repeated calls."""
+        cfg = configs.reduced("qwen3-4b", n_periods=1)
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        prompt = jnp.zeros((2, 8), jnp.int32)
+        # unique scfg (distinct s_max) so no earlier test shares the key
+        scfg = E.ServeConfig(s_max=384, compressed_kv=True)
+        key = (cfg, scfg)
+        E.STEP_TRACES.pop(key, None)
+        a = np.asarray(E.generate(params, cfg, prompt, 4, scfg))
+        assert E.STEP_TRACES[key] == 1
+        b = np.asarray(E.generate(params, cfg, prompt, 4, scfg))
+        assert E.STEP_TRACES[key] == 1          # no retrace on call 2
+        np.testing.assert_array_equal(a, b)
+        assert E.get_serve_step(cfg, scfg) is E.get_serve_step(cfg, scfg)
+
+
+class TestMLACompressedKV:
+    def test_mla_prefill_honors_compressed_kv(self):
+        """Regression (ISSUE satellite): the MLA branch of prefill used
+        to silently ignore scfg.compressed_kv; the latent cache now goes
+        through the same block codec and decode consumes QuantKV."""
+        cfg = configs.reduced("deepseek-v2-236b", n_periods=1)
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        prompt = jnp.zeros((2, 8), jnp.int32)
+        scfg = E.ServeConfig(s_max=256, compressed_kv=True)
+        _, caches, _ = E.prefill(params, cfg, prompt, scfg)
+        assert isinstance(caches.entries[0], KVC.QuantKV)
+        assert caches.entries[0].q.dtype == jnp.int8
+        # and the compressed decode tracks the uncompressed one
+        a = np.asarray(E.generate(params, cfg, prompt, 6,
+                                  E.ServeConfig(s_max=256)))
+        b = np.asarray(E.generate(params, cfg, prompt, 6, scfg))
+        assert (a == b).mean() > 0.6
+
+    def test_mla_init_caches_compressed_shape(self):
+        cfg = configs.reduced("deepseek-v2-236b", n_periods=1)
+        caches = M.init_caches(cfg, batch=2, s_max=256, compressed_kv=True)
+        qkv = caches.entries[0]
+        assert isinstance(qkv, KVC.QuantKV)
+        R = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_dim
+        assert qkv.q.shape == (cfg.n_periods, 2, 256, R)
+        assert qkv.scale.shape == (cfg.n_periods, 2,
+                                   256 // KVC.SEQ_BLOCK, R)
