@@ -13,14 +13,37 @@ do not exist yet, so every mesh constructor would die with
 this module is a no-op.  All axes are semantically ``Auto`` (the SPMD
 partitioner decides), which is also 0.4.x's only behavior, so dropping
 ``axis_types`` loses nothing.
+
+This module also hosts ``warn_once``, the process-wide deprecation
+helper: Python's own per-location warning dedup resets whenever the
+filter stack changes (pytest installs ``always``), so shims that should
+warn exactly once per process keep their own seen-set here.
 """
 from __future__ import annotations
 
 import enum
 import functools
+import warnings
+from typing import Set
 
 import jax
 from jax import sharding as _sharding
+
+_WARNED: Set[str] = set()
+
+
+def warn_once(key: str, message: str, *, category=DeprecationWarning,
+              stacklevel: int = 3) -> None:
+    """Emit `message` the first time `key` is seen in this process.
+
+    Deliberately immune to warning-filter resets: deprecation shims on
+    hot paths (per-gradient, per-KV-block) must not spam once per call
+    under pytest's ``always`` filter.
+    """
+    if key in _WARNED:
+        return
+    _WARNED.add(key)
+    warnings.warn(message, category, stacklevel=stacklevel)
 
 
 def _patch_axis_type() -> None:

@@ -37,6 +37,12 @@ class Codec:
 
     name: str = "?"
     version: int = 1
+    #: Sharded-encode capability declaration, checked statically by
+    #: repro-lint (R3): a codec either overrides `shard_axis` +
+    #: `payload_axes` (split-stable along some axis) or sets
+    #: ``shardable = False`` to opt out explicitly — the checkpoint
+    #: planner then keeps each leaf whole on one owner shard.
+    shardable: bool = True
 
     # -- required -----------------------------------------------------------
     def encode(self, x, *, cfg=None) -> Container:
@@ -50,6 +56,7 @@ class Codec:
         """Host/storage form: numpy payload, `packed=True` in the header."""
         if c.header.param("packed"):
             return c
+        # repro-lint: allow[host-sync] pack() IS the device->storage boundary
         payload = {k: np.asarray(jax.device_get(v))
                    for k, v in c.payload.items()}
         return Container(c.header.with_params(packed=True), payload)

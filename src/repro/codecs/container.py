@@ -115,6 +115,7 @@ class Container:
     # -- conveniences -------------------------------------------------------
     @property
     def nbytes(self) -> int:
+        # repro-lint: allow[host-sync] size accounting is a host-side query
         return sum(np.asarray(jax.device_get(v)).nbytes
                    for v in self.payload.values())
 
@@ -168,6 +169,7 @@ def concat_containers(parts, axis: int, field_axes: Mapping[str, Any]
 
 def to_arrays(c: Container) -> Tuple[Dict[str, Any], Dict[str, np.ndarray]]:
     """(header-json, {field: numpy array}) — the npz/storage form."""
+    # repro-lint: allow[host-sync] to_arrays() is the npz/storage boundary
     arrays = {k: np.asarray(jax.device_get(v)) for k, v in c.payload.items()}
     return c.header.to_json(), arrays
 

@@ -32,6 +32,10 @@ class CuszCodec(Codec):
     cfg: CZ.CompressorConfig = CZ.CompressorConfig()
     name = "cusz"
     version = 1
+    # Lorenzo prediction crosses slice boundaries: encoding slices
+    # independently changes the decode, so sharded saves keep each
+    # leaf whole on one owner shard.
+    shardable = False
 
     @staticmethod
     def make(cfg: Optional[CZ.CompressorConfig] = None, **kw) -> "CuszCodec":
@@ -84,6 +88,7 @@ class CuszCodec(Codec):
         (the blob would decode lossily beyond the bound)."""
         if c.header.param("packed"):
             return True                       # pack() is post-validation
+        # repro-lint: allow[host-sync] one scalar readback per validity check
         n_out = int(jax.device_get(c.payload["n_outliers"]))
         return n_out <= int(c.payload["out_idx"].shape[0])
 

@@ -31,6 +31,9 @@ class ZfpCodec(Codec):
     rate_bits: float = 12.0
     name = "zfp"
     version = 1
+    # 4^d transform blocks span slice boundaries after padding; splitting
+    # changes block alignment and thus the decode, so no sharded encode.
+    shardable = False
 
     @property
     def planes(self) -> int:

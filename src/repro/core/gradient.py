@@ -20,12 +20,12 @@ share one scale and the integer sum is exact.
 """
 from __future__ import annotations
 
-import warnings
 from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro import _compat
 from repro.dist.context import constrain_like_params
 
 
@@ -77,10 +77,11 @@ def cusz_compress_gradient(g: jax.Array, cfg) -> Tuple[dict, float]:
     Returns (packed host blob, resolved eb); decompression needs the same
     cfg parameters back — the replacement Container carries them itself.
     """
-    warnings.warn("cusz_compress_gradient is deprecated; use "
-                  "repro.codecs.get('cusz', cfg=cfg).encode(g) — the "
-                  "returned Container is self-describing",
-                  DeprecationWarning, stacklevel=2)
+    _compat.warn_once(
+        "cusz_compress_gradient",
+        "cusz_compress_gradient is deprecated; use "
+        "repro.codecs.get('cusz', cfg=cfg).encode(g) — the "
+        "returned Container is self-describing")
     from repro.core import compressor as CZ
 
     blob, eb = CZ.compress(g, cfg)
@@ -90,9 +91,10 @@ def cusz_compress_gradient(g: jax.Array, cfg) -> Tuple[dict, float]:
 def cusz_decompress_gradient(packed: dict, eb: float, shape, cfg) -> jax.Array:
     """DEPRECATED: use `codecs.decode(container)` (same cfg on both sides
     is no longer the caller's burden)."""
-    warnings.warn("cusz_decompress_gradient is deprecated; use "
-                  "repro.codecs.decode(container)",
-                  DeprecationWarning, stacklevel=2)
+    _compat.warn_once(
+        "cusz_decompress_gradient",
+        "cusz_decompress_gradient is deprecated; use "
+        "repro.codecs.decode(container)")
     from repro.core import compressor as CZ
 
     return CZ.decompress(CZ.unpack_blob(packed), cfg, eb, tuple(shape))

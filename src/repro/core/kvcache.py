@@ -11,11 +11,12 @@ the cache there — DESIGN.md §7).
 """
 from __future__ import annotations
 
-import warnings
 from typing import NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro import _compat
 
 SEQ_BLOCK = 128          # scale granularity along the sequence axis
 _QMAX = 127.0
@@ -95,10 +96,11 @@ def kv_update_block(qkv: QuantKV, new: jax.Array, pos, seq_axis: int) -> QuantKV
 
 def kv_offload_pack(x: jax.Array, cfg) -> Tuple[dict, float]:
     """DEPRECATED: use `codecs.get("cusz", cfg=cfg).encode(x)`."""
-    warnings.warn("kv_offload_pack is deprecated; use "
-                  "repro.codecs.get('cusz', cfg=cfg).encode(x) — the "
-                  "returned Container records dtype/shape/eb itself",
-                  DeprecationWarning, stacklevel=2)
+    _compat.warn_once(
+        "kv_offload_pack",
+        "kv_offload_pack is deprecated; use "
+        "repro.codecs.get('cusz', cfg=cfg).encode(x) — the "
+        "returned Container records dtype/shape/eb itself")
     from repro.core import compressor as CZ
 
     blob, eb = CZ.compress(jnp.asarray(x, jnp.float32), cfg)
@@ -109,9 +111,10 @@ def kv_offload_restore(packed: dict, eb: float, shape, cfg,
                        dtype=jnp.bfloat16) -> jax.Array:
     """DEPRECATED: use `codecs.decode(container)` (dtype comes from the
     container header, not a caller-side default)."""
-    warnings.warn("kv_offload_restore is deprecated; use "
-                  "repro.codecs.decode(container)",
-                  DeprecationWarning, stacklevel=2)
+    _compat.warn_once(
+        "kv_offload_restore",
+        "kv_offload_restore is deprecated; use "
+        "repro.codecs.decode(container)")
     from repro.core import compressor as CZ
 
     out = CZ.decompress(CZ.unpack_blob(packed), cfg, eb, tuple(shape))

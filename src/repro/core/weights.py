@@ -162,5 +162,6 @@ def max_weight_error(params: Any) -> float:
             continue
         err = jnp.max(jnp.abs(_qdq(p) - p))
         ref = jnp.max(jnp.abs(p))
+        # repro-lint: allow[host-sync] per-leaf readback in test-only metric
         worst = max(worst, float(err / (ref + 1e-30)))
     return worst

@@ -1,0 +1,7 @@
+"""Runtime sanitizers: recompile / transfer / host-sync guards."""
+from .guards import (GuardError, HostSyncError,  # noqa: F401
+                     RecompileError, host_sync_guard, no_implicit_transfers,
+                     no_recompiles)
+
+__all__ = ["GuardError", "HostSyncError", "RecompileError",
+           "host_sync_guard", "no_implicit_transfers", "no_recompiles"]

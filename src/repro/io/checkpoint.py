@@ -41,14 +41,13 @@ import dataclasses
 import json
 import os
 import shutil
-import warnings
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import codecs
+from repro import _compat, codecs
 from repro.io.async_writer import AsyncWriter
 
 CUSZ_MIN_SIZE = 4096
@@ -132,6 +131,8 @@ class CheckpointPolicy:
             # (the old form np.asarray'd the full leaf)
             f = arr.astype(jnp.float32)
             ok = jnp.all(jnp.isfinite(f)) & (jnp.max(f) - jnp.min(f) > 0)
+            # repro-lint: allow[host-sync] one bool scalar gates the
+            # compress-vs-raw decision; unavoidable host branch
             return bool(ok)
         f = np.asarray(arr, np.float32) if arr.dtype != np.float32 else arr
         return bool(np.all(np.isfinite(f))
@@ -149,11 +150,12 @@ def _flatten(tree) -> Dict[str, Any]:
 
 
 def _legacy_policy(mode, eb_valrel, kernel_impl) -> CheckpointPolicy:
-    warnings.warn(
+    _compat.warn_once(
+        "save_checkpoint-mode",
         "save_checkpoint(mode=..., eb_valrel=..., kernel_impl=...) is "
         "deprecated; pass policy=CheckpointPolicy(codec=..., "
         "eb_valrel=..., kernel_impl=...) instead",
-        DeprecationWarning, stacklevel=3)
+        stacklevel=4)
     return CheckpointPolicy(
         codec="cusz" if mode == "cusz" else "lossless",
         eb_valrel=1e-5 if eb_valrel is None else eb_valrel,
@@ -385,6 +387,7 @@ def _assemble_v3(d: str, key: str, entry, shard_files):
     axes = codec.payload_axes(int(entry["axis"]))
     if axes is not None:
         return codecs.concat_containers(parts, int(entry["axis"]), axes)
+    # repro-lint: allow[host-sync] value-space fallback merge is host-side
     vals = [np.asarray(jax.device_get(codecs.decode(p))) for p in parts]
     return np.concatenate(vals, axis=int(entry["axis"]))
 
@@ -525,6 +528,8 @@ def load_checkpoint(ckpt_dir: str, template, step: Optional[int] = None,
                     int(v.size) * np.dtype(v.dtype).itemsize
                     for v in got.payload.values())
                 return _jitted_decode(codec, like, shd)(cont)
+            # repro-lint: allow[host-sync] legacy non-wire restore decodes
+            # on host before placement
             got = np.asarray(jax.device_get(codecs.decode(got, **kw)))
         arr = got.astype(leaf.dtype).reshape(leaf.shape)
         return (jax.device_put(arr, shd) if shd is not None

@@ -28,8 +28,12 @@ Resolution order (most specific wins):
 
 A stage registered without a Pallas impl (e.g. `inflate`, which the
 paper is explicit is RAW-bound and which we keep as the LUT/bit-scan
-reference) resolves any pallas request to its jax impl, so a forced
-policy never crashes mid-pipeline.
+reference) declares itself jax-only with a reason.  Ambient policies
+("auto", env var, `kernel_policy(...)`, config defaults) still resolve
+such a stage to its jax impl so a forced policy never crashes
+mid-pipeline — but an *explicit* per-call ``impl="pallas"`` request now
+raises `NotImplementedError` carrying the declared reason instead of
+silently measuring the reference path.
 """
 from __future__ import annotations
 
@@ -99,18 +103,32 @@ class KernelPolicy:
 # ---------------------------------------------------------------------------
 
 _REGISTRY: Dict[str, Tuple[str, ...]] = {}
+# capability note for kernels registered without a pallas impl: why the
+# pallas path does not exist (surfaced in the explicit-request error)
+_JAX_ONLY_REASON: Dict[str, str] = {}
 
 
-def register(kernel: str, impls: Tuple[str, ...] = ("jax", "pallas")) -> str:
+def register(kernel: str, impls: Tuple[str, ...] = ("jax", "pallas"),
+             jax_only_reason: Optional[str] = None) -> str:
     for i in impls:
         if i not in ("jax", "pallas"):
             raise ValueError(f"registry impls must be concrete, got {i!r}")
+    if jax_only_reason is not None and "pallas" in impls:
+        raise ValueError(f"kernel {kernel!r} registers a pallas impl but "
+                         "also passes jax_only_reason")
     _REGISTRY[kernel] = tuple(impls)
+    if jax_only_reason is not None:
+        _JAX_ONLY_REASON[kernel] = jax_only_reason
     return kernel
 
 
 def registered() -> Dict[str, Tuple[str, ...]]:
     return dict(_REGISTRY)
+
+
+def jax_only_reason(kernel: str) -> Optional[str]:
+    """Why `kernel` has no pallas impl, if it declared one."""
+    return _JAX_ONLY_REASON.get(kernel)
 
 
 # ---------------------------------------------------------------------------
@@ -170,13 +188,22 @@ def ambient_impl(kernel: Optional[str] = None) -> Optional[str]:
 # ---------------------------------------------------------------------------
 
 def resolve(kernel: str, impl: Optional[str] = None,
-            interpret: Optional[bool] = None) -> Resolved:
+            interpret: Optional[bool] = None, *,
+            explicit: Optional[bool] = None) -> Resolved:
     """Resolve a kernel name (+ optional explicit request) to a concrete
-    (impl, interpret) pair.  Call OUTSIDE jit so the result is static."""
+    (impl, interpret) pair.  Call OUTSIDE jit so the result is static.
+
+    `explicit` marks whether `impl` is a direct per-call request (the
+    default when `impl` is given) or a forwarded ambient/config value
+    (`pipeline_policy` passes False).  An explicit pallas request on a
+    jax-only kernel raises instead of silently falling back.
+    """
     if kernel not in _REGISTRY:
         raise KeyError(f"kernel {kernel!r} not registered; known: "
                        f"{sorted(_REGISTRY)}")
     supported = _REGISTRY[kernel]
+    if explicit is None:
+        explicit = impl is not None
     if impl is None:
         impl = ambient_impl(kernel) or "auto"
     _validate(impl)
@@ -188,6 +215,12 @@ def resolve(kernel: str, impl: Optional[str] = None,
         impl = ("pallas" if "pallas" in supported
                 and backend in _PALLAS_BACKENDS else "jax")
     if impl == "pallas" and "pallas" not in supported:
+        if explicit:
+            reason = _JAX_ONLY_REASON.get(kernel, "no pallas impl registered")
+            raise NotImplementedError(
+                f"kernel {kernel!r} has no pallas implementation "
+                f"({reason}); pass impl='jax' (or drop the impl argument "
+                "to use the ambient policy, which falls back to jax)")
         impl = "jax"                       # documented fallback (see module doc)
     if impl == "jax":
         return Resolved("jax", False)
@@ -225,7 +258,9 @@ def pipeline_policy(default_impl: Optional[str] = None) -> PipelinePolicy:
         impl = ambient_impl(kernel)
         if impl is None:
             impl = default_impl
-        return resolve(kernel, impl)
+        # ambient/config impls are forwarded, not per-call requests: a
+        # forced "pallas" policy must not crash the jax-only stages
+        return resolve(kernel, impl, explicit=False)
 
     return PipelinePolicy(
         dualquant=r("lorenzo.dualquant"),

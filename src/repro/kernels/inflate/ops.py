@@ -1,9 +1,11 @@
 """Jit'd public wrapper for the inflate stage; dispatch-registered.
 
 Registered jax-only: the paper is explicit that inflate is RAW-bound and
-sequential per chunk, so there is no Pallas win to chase here — a forced
-"pallas" policy resolves to this reference (see dispatch module doc).
-The LUT decode is the default whenever `max_len_static` permits.
+sequential per chunk, so there is no Pallas win to chase here — an
+ambient "pallas" policy resolves to this reference, and an explicit
+``impl="pallas"`` request raises with the declared reason (see dispatch
+module doc).  The LUT decode is the default whenever `max_len_static`
+permits.
 """
 from __future__ import annotations
 
@@ -15,7 +17,11 @@ import jax
 from .. import dispatch
 from . import ref
 
-KERNEL = dispatch.register("inflate", impls=("jax",))
+KERNEL = dispatch.register(
+    "inflate", impls=("jax",),
+    jax_only_reason="Huffman decode is RAW-bound and sequential per chunk "
+                    "(cuSZ §V); a parallel gap-array two-phase decode is "
+                    "the ROADMAP target before a pallas impl exists")
 
 
 @partial(jax.jit, static_argnames=("max_len_static", "impl", "interpret"))

@@ -261,6 +261,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         fn, args, in_sh, donate, meta, out_sh = input_specs(
             arch, shape_name, mesh, grad_compress, weight_compress,
             microbatch_override, kv_compress, a2a_compress)
+        # repro-lint: allow[jit-cache] dryrun lowers each cell once and
+        # discards it; caching would pin every variant's executable
         jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
                          donate_argnums=donate)
         # must mirror the fsdp=True placement in input_specs: the int8

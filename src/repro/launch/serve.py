@@ -63,7 +63,8 @@ def main():
                              handoff.plen, args.new_tokens)
     else:
         toks = generate(params, cfg, prompt, args.new_tokens, scfg)
-    jax.block_until_ready(toks)
+    jax.block_until_ready(toks)  # repro-lint: allow[host-sync] wall-clock fence
+
     dt = time.perf_counter() - t0
     print(f"arch={cfg.name} batch={args.batch} new={args.new_tokens} "
           f"compressed_kv={args.compressed_kv}")

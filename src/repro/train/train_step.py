@@ -147,6 +147,8 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
         else:
             if tokens.ndim == 3:                 # podded layout, no compress
                 tokens = tokens.reshape(-1, tokens.shape[-1])
+                # repro-lint: allow[tracer-branch] `extra` is a pytree
+                # container; truthiness checks emptiness, not values
                 if extra:
                     extra = jax.tree.map(
                         lambda a: a.reshape(-1, *a.shape[2:]), extra)

@@ -76,7 +76,7 @@ class Trainer:
                     self.cfg.vocab, lc.batch, lc.seq, step, lc.seed))
                 t0 = time.perf_counter()
                 loss, params, opt = self.step_fn(params, opt, toks)
-                loss.block_until_ready()
+                loss.block_until_ready()  # repro-lint: allow[host-sync] straggler timer fence
                 dt = time.perf_counter() - t0
                 slow = self.straggler.observe(step, dt)
                 if fault.loss_is_bad(loss):

@@ -11,6 +11,11 @@ from __future__ import annotations
 
 import sys
 
+# guard fixtures (recompile_guard, host_sync_sanitizer, ...) live next to
+# the linter so the waiver allowlist and the runtime allowlist stay one
+# artifact; `tools` resolves via pythonpath = ["src", "."] in pyproject
+pytest_plugins = ("tools.lint.pytest_plugin",)
+
 
 def pytest_configure(config):
     config.addinivalue_line(

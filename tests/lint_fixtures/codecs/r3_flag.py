@@ -1,0 +1,29 @@
+"""R3 must-flag fixture: incomplete codec registrations."""
+
+
+def register(name, factory):
+    pass
+
+
+def make_header(name, version, x, **params):
+    pass
+
+
+class NoDecode:
+    def encode(self, x, *, cfg=None):
+        return make_header("nodecode", 1, x,
+                           table={"a": 1})   # FLAG: dict header param
+    # FLAG: no decode
+
+
+class NoShardSurface:
+    def encode(self, x, *, cfg=None):
+        pass
+
+    def decode(self, c, *, like=None):
+        pass
+    # FLAG: no shard_axis/payload_axes and no shardable = False
+
+
+register("nodecode", lambda **kw: NoDecode(**kw))
+register("noshard", lambda **kw: NoShardSurface(**kw))

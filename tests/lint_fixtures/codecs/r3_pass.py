@@ -1,0 +1,42 @@
+"""R3 must-pass fixture: full surface, explicit opt-out, scalar params."""
+
+
+def register(name, factory):
+    pass
+
+
+def make_header(name, version, x, **params):
+    pass
+
+
+class FullSurface:
+    def encode(self, x, *, cfg=None):
+        return make_header("full", 1, x, scale=0.5, bits=8,
+                           kv_shape=(2, 3))      # tuples serialize as lists
+
+    def decode(self, c, *, like=None):
+        pass
+
+    def shard_axis(self, shape, nshards):
+        return 0
+
+    def payload_axes(self, axis):
+        return {"data": axis}
+
+
+class OptedOut:
+    shardable = False                            # explicit opt-out
+
+    def encode(self, x, *, cfg=None):
+        pass
+
+    def decode(self, c, *, like=None):
+        pass
+
+    @staticmethod
+    def make(**kw):
+        return OptedOut()
+
+
+register("full", lambda **kw: FullSurface(**kw))
+register("opted", OptedOut.make)

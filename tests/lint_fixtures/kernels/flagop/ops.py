@@ -1,0 +1,4 @@
+"""R4 must-flag: ships kernel.py but registers no pallas impl."""
+from .. import dispatch
+
+KERNEL = dispatch.register("flagop", impls=("jax",))   # FLAG

@@ -1,0 +1,4 @@
+"""R4 must-pass: kernel.py present and pallas registered."""
+from .. import dispatch
+
+KERNEL = dispatch.register("passop", impls=("jax", "pallas"))

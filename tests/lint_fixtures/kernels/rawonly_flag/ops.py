@@ -1,0 +1,4 @@
+"""R4 must-flag: jax-only op without a declared reason."""
+from .. import dispatch
+
+KERNEL = dispatch.register("rawonly_flag", impls=("jax",))   # FLAG: no reason

@@ -1,0 +1,6 @@
+"""R4 must-pass: jax-only op declaring why no pallas impl exists."""
+from .. import dispatch
+
+KERNEL = dispatch.register(
+    "rawonly_pass", impls=("jax",),
+    jax_only_reason="decode is RAW-bound; see the gap-array roadmap item")

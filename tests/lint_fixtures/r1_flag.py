@@ -1,0 +1,26 @@
+"""R1 must-flag fixture: syncs in jit-reachable and host-path code."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def helper(x):
+    # reachable from the jit root below -> every sync form flags
+    v = jax.device_get(x)                  # FLAG: device_get (jit-reachable)
+    w = np.asarray(x)                      # FLAG: np.asarray (jit-reachable)
+    return v, w
+
+
+@jax.jit
+def root(x):
+    y = jnp.sum(x)
+    if False:
+        return helper(y)
+    return y.item()                        # FLAG: .item() (jit-reachable)
+
+
+def host_path(x):
+    a = jax.device_get(x)                  # FLAG: blocking sync (host path)
+    x.block_until_ready()                  # FLAG: blocking sync (host path)
+    b = jnp.max(jnp.abs(x))
+    return a, float(b)                     # FLAG: float() on traced value

@@ -1,0 +1,21 @@
+"""R1 must-pass fixture: clean device code plus waived intentional syncs."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def root(x):
+    s = x.shape                             # static metadata: not a sync
+    return jnp.sum(x) / s[0]
+
+
+def boundary(x):
+    # repro-lint: allow[host-sync] storage boundary, one readback per save
+    host = jax.device_get(x)
+    stats = jnp.max(x)
+    n = int(stats)  # repro-lint: allow[host-sync] one scalar for the header
+    return host, n
+
+
+def untraced(n):
+    return float(n) + int(n)                # plain python: no sync

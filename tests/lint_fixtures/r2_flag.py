@@ -1,0 +1,10 @@
+"""R2 must-flag fixture: per-call jax.jit construction."""
+import jax
+
+
+def hot_loop(fn, xs):
+    out = []
+    for x in xs:
+        step = jax.jit(fn)                 # FLAG: fresh jit every call
+        out.append(step(x))
+    return out

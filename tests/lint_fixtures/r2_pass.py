@@ -1,0 +1,28 @@
+"""R2 must-pass fixture: every accepted caching shape."""
+import functools
+
+import jax
+
+MODULE_LEVEL = jax.jit(lambda x: x + 1)     # module level: fine
+_CACHE = {}
+
+
+@functools.lru_cache(maxsize=None)
+def get_step(cfg):
+    return jax.jit(lambda x: x * cfg)       # memoized by lru_cache: fine
+
+
+def dict_cached(key, fn):
+    if key not in _CACHE:
+        _CACHE[key] = jax.jit(fn)           # module-dict cache: fine
+    return _CACHE[key]
+
+
+class Runner:
+    def __init__(self, fn):
+        self.step = jax.jit(fn)             # once per object: fine
+
+
+def waived(fn):
+    # repro-lint: allow[jit-cache] one-shot lowering tool, nothing to cache
+    return jax.jit(fn).lower(1.0).compile()

@@ -1,0 +1,14 @@
+"""R5 must-flag fixture: python branch on a traced value."""
+import jax
+import jax.numpy as jnp
+from functools import partial
+
+
+@partial(jax.jit, static_argnames=("mode",))
+def root(x, mode):
+    y = jnp.sum(x)
+    if y > 0:                              # FLAG: branch on tracer
+        return y
+    while x:                               # FLAG: loop on tracer param
+        break
+    return -y

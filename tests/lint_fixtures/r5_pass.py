@@ -1,0 +1,17 @@
+"""R5 must-pass fixture: static-arg branches and metadata branches."""
+import jax
+import jax.numpy as jnp
+from functools import partial
+
+
+@partial(jax.jit, static_argnames=("impl", "nbins"))
+def root(x, impl, nbins):
+    if impl == "pallas":                    # static arg: fine
+        y = x * 2
+    else:
+        y = x * 3
+    if x.ndim == 2:                         # shape metadata: fine
+        y = y.reshape(-1)
+    while nbins > 1024:                     # static arg: fine
+        nbins //= 2
+    return jnp.sum(y) + nbins

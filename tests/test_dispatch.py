@@ -11,6 +11,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
+import pytest
 
 from repro.core import compressor as C, dualquant as dq, gradient as G, \
     huffman as hf, kvcache as KV, weights as W
@@ -47,9 +48,26 @@ class TestPolicyResolution:
         r = dispatch.resolve("deflate", impl="pallas-interpret")
         assert r == dispatch.Resolved("pallas", True)
 
-    def test_unsupported_pallas_falls_back(self):
-        assert dispatch.resolve("inflate", impl="pallas") == \
+    def test_explicit_pallas_on_jax_only_raises(self):
+        # an explicit per-call request must not silently measure the
+        # reference path; the error carries the declared reason
+        with pytest.raises(NotImplementedError, match="RAW-bound"):
+            dispatch.resolve("inflate", impl="pallas")
+
+    def test_ambient_pallas_on_jax_only_falls_back(self):
+        # forwarded policy/config impls keep the documented fallback so a
+        # forced pipeline never crashes on the jax-only stage
+        with dispatch.kernel_policy("pallas"):
+            assert dispatch.resolve("inflate") == \
+                dispatch.Resolved("jax", False)
+        assert dispatch.resolve("inflate", "pallas", explicit=False) == \
             dispatch.Resolved("jax", False)
+        pp = dispatch.pipeline_policy("pallas")
+        assert pp.inflate == dispatch.Resolved("jax", False)
+
+    def test_jax_only_reason_recorded(self):
+        assert "RAW-bound" in dispatch.jax_only_reason("inflate")
+        assert dispatch.jax_only_reason("histogram") is None
 
     def test_env_var_policy(self, monkeypatch):
         monkeypatch.setenv(dispatch.ENV_VAR, "pallas-interpret")

@@ -1,0 +1,175 @@
+"""Runtime-sanitizer tests (repro.debug.guards + the lint pytest plugin).
+
+The acceptance contract from the static-analysis PR: the serve decode
+loop compiles exactly once across repeated `generate` calls and runs
+without implicit transfers; the checkpoint encode phase performs zero
+host syncs outside statically waived sites; codec roundtrips are
+sync-clean; deprecated shims warn exactly once per process.
+"""
+from __future__ import annotations
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import _compat, configs
+from repro.core.compressor import CompressorConfig
+from repro.debug import (HostSyncError, RecompileError, host_sync_guard,
+                         no_recompiles)
+from repro.models import model as M
+from repro.serve import engine as E
+
+
+# ---------------------------------------------------------------------------
+# Guard mechanics (unit level)
+# ---------------------------------------------------------------------------
+
+class TestGuardMechanics:
+    def test_no_recompiles_counts_and_raises(self, recompile_guard):
+        @jax.jit
+        def f2(x):
+            return x * 3
+
+        x = jnp.ones(16)
+        with recompile_guard(max_compiles=1, match=r"^f2$") as log:
+            f2(x)
+            f2(x)                       # cached: no second compile
+        assert log.compiles == ["f2"]
+
+        with pytest.raises(RecompileError, match="no_recompiles"):
+            with recompile_guard(max_compiles=0, match=r"^f3$"):
+                @jax.jit
+                def f3(x):
+                    return x - 1
+                f3(x)
+
+    def test_host_sync_guard_attributes_library_syncs(self):
+        from repro.core import compressor as CZ
+
+        data = jnp.linspace(0.0, 1.0, 4096).reshape(64, 64)
+        blob, _eb = CZ.compress(data, CompressorConfig())
+        with pytest.raises(HostSyncError, match="compressor.py"):
+            with host_sync_guard({}):   # empty allowlist: everything trips
+                CZ.compressed_bytes(blob, CompressorConfig().nbins)
+
+    def test_host_sync_guard_ignores_test_code_syncs(self):
+        with host_sync_guard({}) as log:
+            jax.device_get(jnp.ones(4))     # issued by the harness: fine
+        assert log.violations == []
+
+
+# ---------------------------------------------------------------------------
+# Serve decode loop (pins the PR-5 STEP_TRACES fix under the sanitizer)
+# ---------------------------------------------------------------------------
+
+class TestServeUnderGuards:
+    def test_serve_step_compiles_exactly_once(self, recompile_guard):
+        cfg = configs.reduced("qwen3-4b", n_periods=1)
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        prompt = jnp.zeros((2, 8), jnp.int32)
+        # distinct s_max (multiple of the KV block): fresh jit cache key
+        scfg = E.ServeConfig(s_max=256, compressed_kv=True)
+        E.STEP_TRACES.pop((cfg, scfg), None)
+        E.get_serve_step.cache_clear()
+        with recompile_guard(max_compiles=1, match=r"^step$") as log:
+            a = np.asarray(E.generate(params, cfg, prompt, 4, scfg))
+            b = np.asarray(E.generate(params, cfg, prompt, 4, scfg))
+        assert log.compiles == ["step"]     # compiled once, reused once
+        assert E.STEP_TRACES[(cfg, scfg)] == 1
+        np.testing.assert_array_equal(a, b)
+
+    def test_decode_steady_state_zero_compiles(self, recompile_guard):
+        cfg = configs.reduced("qwen3-4b", n_periods=1)
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        prompt = jnp.zeros((2, 8), jnp.int32)
+        scfg = E.ServeConfig(s_max=512, compressed_kv=True)
+        E.generate(params, cfg, prompt, 4, scfg)          # warmup
+        with recompile_guard(max_compiles=0, match=r"^step$"):
+            E.generate(params, cfg, prompt, 6, scfg)      # longer decode
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint encode + codec roundtrip under the host-sync sanitizer
+# ---------------------------------------------------------------------------
+
+class TestSyncCleanPaths:
+    def test_checkpoint_encode_zero_unwaived_syncs(self, tmp_path,
+                                                   host_sync_sanitizer):
+        from repro.io import checkpoint as CK
+
+        rng = np.random.default_rng(0)
+        tree = {"w": jnp.asarray(rng.standard_normal((64, 64)), jnp.float32),
+                "b": jnp.asarray(rng.standard_normal((64,)), jnp.float32),
+                "step": jnp.asarray(3, jnp.int32)}
+        policy = CK.CheckpointPolicy(codec="cusz")
+        with host_sync_sanitizer() as log:
+            CK.save_checkpoint(str(tmp_path), 0, tree, policy=policy)
+        assert log.violations == []
+        # the boundary crossings that did happen are the waived ones
+        assert log.allowed_hits
+
+    def test_codec_roundtrip_sync_clean(self, host_sync_sanitizer):
+        from repro import codecs
+
+        x = jnp.linspace(-1.0, 1.0, 8192).reshape(64, 128)
+        for name in ("int8-block", "cusz", "lossless"):
+            codec = codecs.get(name)
+            with host_sync_sanitizer() as log:
+                c = codec.encode(x)
+                y = codec.decode(c, like=x)
+            assert log.violations == [], name
+            y.block_until_ready()
+            assert y.shape == x.shape
+
+
+# ---------------------------------------------------------------------------
+# Deprecated shims: exactly once per process
+# ---------------------------------------------------------------------------
+
+class TestWarnOnce:
+    def _count(self, fn, *args, calls=3, **kw):
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")     # defeat location dedup
+            for _ in range(calls):
+                fn(*args, **kw)
+        return sum(issubclass(x.category, DeprecationWarning) for x in w)
+
+    def test_kv_offload_shims_warn_once(self):
+        from repro.core import kvcache as KVC
+
+        _compat._WARNED.discard("kv_offload_pack")
+        _compat._WARNED.discard("kv_offload_restore")
+        cfg = CompressorConfig()
+        x = jnp.linspace(0.0, 1.0, 1024).reshape(32, 32)
+        assert self._count(KVC.kv_offload_pack, x, cfg) == 1
+        packed, eb = KVC.kv_offload_pack(x, cfg)
+        assert self._count(KVC.kv_offload_restore, packed, eb,
+                           x.shape, cfg) == 1
+
+    def test_gradient_shims_warn_once(self):
+        from repro.core import gradient as G
+
+        _compat._WARNED.discard("cusz_compress_gradient")
+        cfg = CompressorConfig()
+        g = jnp.linspace(0.0, 1.0, 1024).reshape(32, 32)
+        assert self._count(G.cusz_compress_gradient, g, cfg) == 1
+
+    def test_save_checkpoint_mode_warns_once(self, tmp_path):
+        from repro.io import checkpoint as CK
+
+        _compat._WARNED.discard("save_checkpoint-mode")
+        tree = {"w": jnp.ones((8, 8), jnp.float32)}
+
+        def legacy(i):
+            CK.save_checkpoint(str(tmp_path), i, tree, mode="lossless")
+
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            legacy(0)
+            legacy(1)
+            legacy(2)
+        assert sum(issubclass(x.category, DeprecationWarning)
+                   for x in w) == 1

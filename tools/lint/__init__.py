@@ -1,0 +1,37 @@
+"""`repro-lint` — AST-based static analysis for the JAX/Pallas stack.
+
+Run as::
+
+    python -m tools.lint src/
+
+Rules (see ``tools/lint/rules/``):
+
+    R1-host-sync        no host-sync calls (`jax.device_get`, `.item()`,
+                        `.block_until_ready()`, `np.asarray`, `float()`/
+                        `int()`/`bool()` on traced values) in jit-reachable
+                        code; blocking syncs flagged on host paths too
+    R2-jit-cache        no `jax.jit` constructed inside a function body
+                        without an lru/module-level cache (the per-call
+                        re-jit bug class)
+    R3-codec-registry   every registered codec implements the full `Codec`
+                        protocol incl. the sharded-encode surface or
+                        explicitly opts out; header params stay JSON-able
+    R4-kernel-dispatch  every `kernels/<op>/` with a `kernel.py` registers
+                        a pallas impl; ops without one declare themselves
+                        jax-only with a reason; the pipeline-stage table is
+                        fully registered
+    R5-tracer-branch    no Python `if`/`while` on traced values inside
+                        jitted functions
+
+Intentional violations carry a waiver pragma with a reason::
+
+    x = jax.device_get(stats)   # repro-lint: allow[host-sync] one scalar sync
+
+A pragma on its own line covers the next statement; a trailing pragma
+covers the statement it sits on (a pragma on a ``def`` line covers the
+whole function).  Unwaived findings fail the run (exit code 1).
+"""
+from .engine import (Finding, Report, Waiver, lint_paths,  # noqa: F401
+                     waived_spans)
+
+__all__ = ["Finding", "Report", "Waiver", "lint_paths", "waived_spans"]

@@ -1,0 +1,44 @@
+"""CLI: ``python -m tools.lint src/ [--json report.json] [--rules R1,R2]``.
+
+Exit code 0 when every finding is waived (or none exist), 1 otherwise.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from .engine import lint_paths
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro-lint",
+        description="AST-based static analysis for the repro JAX stack")
+    ap.add_argument("paths", nargs="+", help="files or directories to lint")
+    ap.add_argument("--json", metavar="FILE", default=None,
+                    help="write the machine-readable findings report here")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule ids or prefixes "
+                         "(e.g. R1,R4-kernel-dispatch); default: all")
+    ap.add_argument("--include-waived", action="store_true",
+                    help="also print waived findings")
+    args = ap.parse_args(argv)
+
+    rules = ([r.strip() for r in args.rules.split(",") if r.strip()]
+             if args.rules else None)
+    report = lint_paths(args.paths, rules=rules)
+    if args.json:
+        report.dump(args.json)
+
+    shown = (report.findings if args.include_waived else report.unwaived)
+    for f in shown:
+        print(f)
+    n_waived = sum(f.waived for f in report.findings)
+    print(f"repro-lint: {len(report.findings)} finding(s), "
+          f"{n_waived} waived, {len(report.unwaived)} unwaived "
+          f"({len(report.rules)} rules)", file=sys.stderr)
+    return 1 if report.unwaived else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,552 @@
+"""Rule engine: file walking, module indexing, waiver pragmas, reporting.
+
+The engine parses every ``.py`` file under the given roots into a
+`ModuleInfo` (AST + import map + function table), links them into an
+`Index` with a best-effort cross-module call graph, computes the set of
+functions reachable from a ``jax.jit`` / ``pallas_call`` region, runs
+each rule over the index, and applies waiver pragmas to the findings.
+
+Everything here is static: the linted code is never imported, so the
+linter runs in a bare environment and cannot be fooled by import-time
+side effects.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import os
+import re
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+REPORT_VERSION = 1
+
+#: waiver categories (the `allow[...]` tags) by rule id
+CATEGORIES = {
+    "R1-host-sync": "host-sync",
+    "R2-jit-cache": "jit-cache",
+    "R3-codec-registry": "codec-registry",
+    "R4-kernel-dispatch": "kernel-dispatch",
+    "R5-tracer-branch": "tracer-branch",
+}
+
+_PRAGMA_RE = re.compile(
+    r"#\s*repro-lint:\s*allow\[([a-z0-9_, -]+)\]\s*(.*?)\s*$")
+
+
+# ---------------------------------------------------------------------------
+# Data model
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Waiver:
+    category: str
+    reason: str
+    pragma_line: int
+    span: Tuple[int, int]           # statement lines covered (inclusive)
+
+    def covers(self, line: int) -> bool:
+        return self.span[0] <= line <= self.span[1]
+
+
+@dataclasses.dataclass
+class Finding:
+    rule: str
+    path: str                       # as-given (relative) path
+    line: int
+    col: int
+    message: str
+    waived: bool = False
+    waiver_reason: Optional[str] = None
+
+    @property
+    def category(self) -> str:
+        return CATEGORIES.get(self.rule, self.rule)
+
+    def to_json(self) -> Dict:
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "col": self.col, "message": self.message,
+                "waived": self.waived, "waiver_reason": self.waiver_reason}
+
+    def __str__(self) -> str:
+        tag = " [waived: %s]" % self.waiver_reason if self.waived else ""
+        return (f"{self.path}:{self.line}:{self.col}: {self.rule}: "
+                f"{self.message}{tag}")
+
+
+@dataclasses.dataclass
+class FunctionInfo:
+    module: "ModuleInfo"
+    qualname: str                   # "f", "Class.m", "outer.inner"
+    node: ast.AST                   # FunctionDef / AsyncFunctionDef
+    parent_class: Optional[str] = None
+    jit_root: bool = False
+    jit_reachable: bool = False
+    static_params: Tuple[str, ...] = ()
+
+    @property
+    def key(self) -> Tuple[str, str]:
+        return (self.module.modname, self.qualname)
+
+
+class ModuleInfo:
+    def __init__(self, path: str, modname: str, source: str):
+        self.path = path
+        self.modname = modname
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree: Optional[ast.Module] = None
+        self.parse_error: Optional[SyntaxError] = None
+        try:
+            self.tree = ast.parse(source)
+        except SyntaxError as e:
+            self.parse_error = e
+            return
+        self.parents = _parent_map(self.tree)
+        # import maps
+        self.imports: Dict[str, str] = {}       # alias -> dotted module
+        self.from_names: Dict[str, Tuple[str, str]] = {}  # name -> (mod, attr)
+        self._collect_imports()
+        # function table (module-level, class methods, one level of nesting)
+        self.functions: Dict[str, FunctionInfo] = {}
+        self._collect_functions()
+        self.waivers: List[Waiver] = _parse_waivers(self)
+
+    # -- imports ------------------------------------------------------------
+    def _rel_base(self, level: int) -> str:
+        """Package that a `from ...` import of `level` dots resolves in."""
+        parts = self.modname.split(".")
+        # the module's own package drops the trailing module name; each
+        # additional dot beyond the first climbs one more package
+        keep = len(parts) - level
+        return ".".join(parts[:max(keep, 0)])
+
+    def _collect_imports(self) -> None:
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    self.imports[a.asname or a.name.split(".")[0]] = \
+                        a.name if a.asname else a.name.split(".")[0]
+                    if a.asname:
+                        self.imports[a.asname] = a.name
+            elif isinstance(node, ast.ImportFrom):
+                base = (node.module or "")
+                if node.level:
+                    rel = self._rel_base(node.level)
+                    base = f"{rel}.{base}" if base else rel
+                for a in node.names:
+                    local = a.asname or a.name
+                    # `from X import y`: y may be a submodule or a name;
+                    # record both views and let resolution pick
+                    self.imports.setdefault(local, f"{base}.{a.name}"
+                                            if base else a.name)
+                    self.from_names[local] = (base, a.name)
+
+    # -- functions ----------------------------------------------------------
+    def _collect_functions(self) -> None:
+        def visit(body, prefix, parent_class):
+            for node in body:
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    q = f"{prefix}{node.name}"
+                    self.functions[q] = FunctionInfo(
+                        self, q, node, parent_class=parent_class)
+                    visit(node.body, f"{q}.", parent_class)
+                elif isinstance(node, ast.ClassDef):
+                    visit(node.body, f"{node.name}.", node.name)
+        visit(self.tree.body, "", None)
+
+    def enclosing_function(self, node: ast.AST) -> Optional[FunctionInfo]:
+        cur = node
+        while cur is not None:
+            cur = self.parents.get(cur)
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for fi in self.functions.values():
+                    if fi.node is cur:
+                        return fi
+        return None
+
+
+def _parent_map(tree: ast.AST) -> Dict[ast.AST, ast.AST]:
+    parents: Dict[ast.AST, ast.AST] = {}
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            parents[child] = node
+    return parents
+
+
+def _parse_waivers(mod: ModuleInfo) -> List[Waiver]:
+    """Attach each `# repro-lint: allow[...]` pragma to a statement span.
+
+    Trailing pragma -> the innermost statement on that line (a pragma on
+    a `def` line covers the whole function); comment-only line -> the
+    next statement below it.
+    """
+    stmts = [n for n in ast.walk(mod.tree)
+             if isinstance(n, ast.stmt) and hasattr(n, "end_lineno")]
+    out: List[Waiver] = []
+    for i, text in enumerate(mod.lines, start=1):
+        m = _PRAGMA_RE.search(text)
+        if not m:
+            continue
+        cats = [c.strip() for c in m.group(1).split(",") if c.strip()]
+        reason = m.group(2).strip()
+        comment_only = text.strip().startswith("#")
+        if comment_only:
+            below = [s for s in stmts if s.lineno > i]
+            target = min(below, key=lambda s: s.lineno) if below else None
+        else:
+            containing = [s for s in stmts
+                          if s.lineno <= i <= s.end_lineno]
+            target = (max(containing, key=lambda s: s.lineno)
+                      if containing else None)
+        span = (target.lineno, target.end_lineno) if target is not None \
+            else (i, i)
+        for c in cats:
+            out.append(Waiver(c, reason, i, span))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Index: cross-module resolution + jit reachability
+# ---------------------------------------------------------------------------
+
+#: attribute roots treated as the jax / numpy namespaces after alias
+#: normalization (``import jax.numpy as jnp`` -> "jax.numpy")
+JAX_JIT_CHAINS = {"jax.jit", "jit"}
+PALLAS_CALL_SUFFIX = "pallas_call"
+
+
+class Index:
+    def __init__(self, modules: Sequence[ModuleInfo]):
+        self.modules = [m for m in modules if m.tree is not None]
+        self.by_name: Dict[str, ModuleInfo] = {m.modname: m
+                                               for m in self.modules}
+        self._mark_jit_roots()
+        self._propagate_reachability()
+
+    # -- name / chain resolution -------------------------------------------
+    def attr_chain(self, mod: ModuleInfo, node: ast.AST) -> Optional[str]:
+        """Dotted name of an expression ("jnp.asarray" -> "jax.numpy.asarray"
+        after alias normalization), or None for non-name expressions."""
+        parts: List[str] = []
+        cur = node
+        while isinstance(cur, ast.Attribute):
+            parts.append(cur.attr)
+            cur = cur.value
+        if not isinstance(cur, ast.Name):
+            return None
+        parts.append(cur.id)
+        parts.reverse()
+        root = parts[0]
+        if root in mod.imports:
+            parts[0] = mod.imports[root]
+        elif root in mod.from_names:
+            base, orig = mod.from_names[root]
+            parts[0] = f"{base}.{orig}" if base else orig
+        return ".".join(parts)
+
+    def find_module(self, dotted: str) -> Optional[ModuleInfo]:
+        if dotted in self.by_name:
+            return self.by_name[dotted]
+        # suffix match lets fixture trees resolve without a package root
+        tail = "." + dotted
+        hits = [m for n, m in self.by_name.items() if n.endswith(tail)]
+        return hits[0] if len(hits) == 1 else None
+
+    def resolve_call(self, mod: ModuleInfo, scope: Optional[FunctionInfo],
+                     func: ast.AST) -> Optional[FunctionInfo]:
+        """Best-effort: the FunctionInfo a call expression refers to."""
+        if isinstance(func, ast.Name):
+            name = func.id
+            if scope is not None:                      # inner def
+                inner = mod.functions.get(f"{scope.qualname}.{name}")
+                if inner is not None:
+                    return inner
+            if name in mod.functions:
+                return mod.functions[name]
+            if scope is not None and scope.parent_class:
+                meth = mod.functions.get(f"{scope.parent_class}.{name}")
+                if meth is not None:
+                    return meth
+            if name in mod.from_names:
+                base, orig = mod.from_names[name]
+                target = self.find_module(base) if base else None
+                if target is not None and orig in target.functions:
+                    return target.functions[orig]
+        elif isinstance(func, ast.Attribute):
+            base = func.value
+            if isinstance(base, ast.Name):
+                if base.id == "self" and scope is not None \
+                        and scope.parent_class:
+                    meth = mod.functions.get(
+                        f"{scope.parent_class}.{func.attr}")
+                    if meth is not None:
+                        return meth
+                dotted = mod.imports.get(base.id)
+                if dotted is None and base.id in mod.from_names:
+                    b, o = mod.from_names[base.id]
+                    dotted = f"{b}.{o}" if b else o
+                if dotted is not None:
+                    target = self.find_module(dotted)
+                    if target is not None:
+                        return target.functions.get(func.attr)
+        return None
+
+    # -- jit roots ----------------------------------------------------------
+    def _decorator_static_names(self, mod: ModuleInfo,
+                                deco: ast.AST) -> Tuple[str, ...]:
+        """static_argnames of a partial(jax.jit, ...) / jax.jit(...) deco."""
+        if not isinstance(deco, ast.Call):
+            return ()
+        for kw in deco.keywords:
+            if kw.arg == "static_argnames":
+                names = []
+                for n in ast.walk(kw.value):
+                    if isinstance(n, ast.Constant) and isinstance(n.value,
+                                                                  str):
+                        names.append(n.value)
+                return tuple(names)
+        return ()
+
+    def _is_jit_decorator(self, mod: ModuleInfo, deco: ast.AST) -> bool:
+        chain = self.attr_chain(mod, deco)
+        if chain in JAX_JIT_CHAINS:
+            return True
+        if isinstance(deco, ast.Call):
+            fchain = self.attr_chain(mod, deco.func)
+            if fchain in JAX_JIT_CHAINS:
+                return True
+            if fchain in ("functools.partial", "partial") and deco.args:
+                return self.attr_chain(mod, deco.args[0]) in JAX_JIT_CHAINS
+        return False
+
+    def _inner_defs(self, fi: FunctionInfo) -> List[FunctionInfo]:
+        prefix = fi.qualname + "."
+        return [f for q, f in fi.module.functions.items()
+                if q.startswith(prefix)]
+
+    def _mark_root(self, fi: FunctionInfo,
+                   static_names: Tuple[str, ...] = ()) -> None:
+        fi.jit_root = True
+        fi.jit_reachable = True
+        if static_names:
+            fi.static_params = tuple(sorted(set(fi.static_params)
+                                            | set(static_names)))
+
+    def _mark_jit_roots(self) -> None:
+        for mod in self.modules:
+            # decorated roots
+            for fi in mod.functions.values():
+                for deco in getattr(fi.node, "decorator_list", []):
+                    if self._is_jit_decorator(mod, deco):
+                        self._mark_root(
+                            fi, self._decorator_static_names(mod, deco))
+                    chain = self.attr_chain(
+                        mod, deco.func if isinstance(deco, ast.Call)
+                        else deco)
+                    if chain and chain.endswith(PALLAS_CALL_SUFFIX):
+                        self._mark_root(fi)
+            # call-site roots: jax.jit(f) / jax.jit(factory(...)) /
+            # pallas_call(kernel_fn, ...)
+            for node in ast.walk(mod.tree):
+                if not isinstance(node, ast.Call) or not node.args:
+                    continue
+                fchain = self.attr_chain(mod, node.func)
+                is_jit = fchain in JAX_JIT_CHAINS
+                is_pallas = bool(fchain) and fchain.endswith(
+                    PALLAS_CALL_SUFFIX)
+                if not (is_jit or is_pallas):
+                    continue
+                statics = self._decorator_static_names(mod, node)
+                scope = mod.enclosing_function(node)
+                arg0 = node.args[0]
+                target = None
+                if isinstance(arg0, (ast.Name, ast.Attribute)):
+                    target = self.resolve_call(mod, scope, arg0)
+                    if target is not None:
+                        self._mark_root(target, statics)
+                elif isinstance(arg0, ast.Call):
+                    # jax.jit(make_step(cfg)): the jitted fn is the
+                    # factory's closure — mark the factory's inner defs
+                    factory = self.resolve_call(mod, scope, arg0.func)
+                    if factory is not None:
+                        inner = self._inner_defs(factory)
+                        for f in (inner or [factory]):
+                            self._mark_root(f, statics)
+
+    # -- reachability -------------------------------------------------------
+    def calls_of(self, fi: FunctionInfo) -> List[FunctionInfo]:
+        """Resolved callees of `fi`'s own body (nested defs excluded —
+        they are separate nodes in the graph; lambdas included)."""
+        out = []
+        skip: Set[ast.AST] = set()
+        for node in ast.walk(fi.node):
+            if node is not fi.node and isinstance(
+                    node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                skip.update(ast.walk(node))
+        for node in ast.walk(fi.node):
+            if node in skip or not isinstance(node, ast.Call):
+                continue
+            target = self.resolve_call(fi.module, fi, node.func)
+            if target is not None:
+                out.append(target)
+        return out
+
+    def _propagate_reachability(self) -> None:
+        frontier = [fi for mod in self.modules
+                    for fi in mod.functions.values() if fi.jit_root]
+        seen: Set[Tuple[str, str]] = {fi.key for fi in frontier}
+        while frontier:
+            fi = frontier.pop()
+            for callee in self.calls_of(fi):
+                if callee.key not in seen:
+                    seen.add(callee.key)
+                    callee.jit_reachable = True
+                    frontier.append(callee)
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+def _iter_py_files(paths: Iterable[str]) -> List[str]:
+    files: List[str] = []
+    for p in paths:
+        if os.path.isfile(p) and p.endswith(".py"):
+            files.append(p)
+        elif os.path.isdir(p):
+            for dirpath, dirnames, filenames in os.walk(p):
+                dirnames[:] = [d for d in dirnames
+                               if d not in ("__pycache__", ".git")]
+                files.extend(os.path.join(dirpath, f)
+                             for f in sorted(filenames)
+                             if f.endswith(".py"))
+    return sorted(set(files))
+
+
+def _modname_for(path: str, roots: Sequence[str]) -> str:
+    """Dotted module name relative to the scan root (src/ stripped)."""
+    norm = path.replace(os.sep, "/")
+    best = ""
+    for r in roots:
+        rn = r.rstrip("/").replace(os.sep, "/")
+        if os.path.isfile(rn):
+            rn = os.path.dirname(rn)
+        if rn and (norm == rn or norm.startswith(rn + "/")):
+            if len(rn) > len(best):
+                best = rn
+    rel = norm[len(best):].lstrip("/") if best else norm
+    if rel.startswith("src/"):
+        rel = rel[4:]
+    rel = rel[:-3] if rel.endswith(".py") else rel
+    if rel.endswith("/__init__"):
+        rel = rel[:-len("/__init__")]
+    return rel.replace("/", ".")
+
+
+def build_index(paths: Sequence[str]) -> Index:
+    mods = []
+    for f in _iter_py_files(paths):
+        with open(f, "r", encoding="utf-8") as fh:
+            src = fh.read()
+        mods.append(ModuleInfo(f, _modname_for(f, paths), src))
+    return Index(mods)
+
+
+@dataclasses.dataclass
+class Report:
+    findings: List[Finding]
+    roots: List[str]
+    rules: List[str]
+
+    @property
+    def unwaived(self) -> List[Finding]:
+        return [f for f in self.findings if not f.waived]
+
+    def to_json(self) -> Dict:
+        fs = sorted(self.findings, key=lambda f: (f.path, f.line, f.rule))
+        return {"version": REPORT_VERSION, "roots": list(self.roots),
+                "rules": sorted(self.rules),
+                "counts": {"total": len(fs),
+                           "waived": sum(f.waived for f in fs),
+                           "unwaived": len(self.unwaived)},
+                "findings": [f.to_json() for f in fs]}
+
+    def dump(self, path: str) -> None:
+        with open(path, "w") as fh:
+            json.dump(self.to_json(), fh, indent=2, sort_keys=True)
+            fh.write("\n")
+
+
+def _apply_waivers(index: Index, findings: List[Finding]) -> None:
+    by_path = {m.path: m for m in index.modules}
+    for f in findings:
+        mod = by_path.get(f.path)
+        if mod is None:
+            continue
+        for w in mod.waivers:
+            if w.category == f.category and w.covers(f.line):
+                f.waived = True
+                f.waiver_reason = w.reason or "(no reason given)"
+                break
+
+
+def lint_paths(paths: Sequence[str],
+               rules: Optional[Sequence[str]] = None) -> Report:
+    """Run the rule set over `paths`, returning a `Report` with waivers
+    applied.  `rules` filters by rule id ("R1-host-sync") or short
+    prefix ("R1")."""
+    from .rules import all_rules
+
+    index = build_index(paths)
+    selected = all_rules()
+    if rules:
+        want = {r.lower() for r in rules}
+        selected = [r for r in selected
+                    if r.RULE_ID.lower() in want
+                    or r.RULE_ID.split("-")[0].lower() in want]
+    findings: List[Finding] = []
+    for mod in index.modules:
+        if mod.parse_error is not None:
+            findings.append(Finding(
+                "parse-error", mod.path, mod.parse_error.lineno or 1, 0,
+                f"syntax error: {mod.parse_error.msg}"))
+    for rule in selected:
+        findings.extend(rule.run(index))
+    # orphan-waiver check: a pragma that waives nothing is stale
+    by_path: Dict[str, List[Finding]] = {}
+    for f in findings:
+        by_path.setdefault(f.path, []).append(f)
+    _apply_waivers(index, findings)
+    for mod in index.modules:
+        for w in mod.waivers:
+            if w.category not in CATEGORIES.values():
+                findings.append(Finding(
+                    "waiver-error", mod.path, w.pragma_line, 0,
+                    f"unknown waiver category {w.category!r}; known: "
+                    f"{sorted(CATEGORIES.values())}"))
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return Report(findings, list(paths), [r.RULE_ID for r in selected])
+
+
+# ---------------------------------------------------------------------------
+# Runtime bridge: waived host-sync sites for the pytest sanitizers
+# ---------------------------------------------------------------------------
+
+def waived_spans(root: str, category: str = "host-sync"
+                 ) -> Dict[str, List[Tuple[int, int, str]]]:
+    """{absolute file path: [(start_line, end_line, reason), ...]} of every
+    `category` waiver under `root`.  The runtime host-sync sanitizer uses
+    this to allow syncs originating from statically waived statements."""
+    out: Dict[str, List[Tuple[int, int, str]]] = {}
+    for f in _iter_py_files([root]):
+        with open(f, "r", encoding="utf-8") as fh:
+            src = fh.read()
+        mod = ModuleInfo(f, _modname_for(f, [root]), src)
+        if mod.tree is None:
+            continue
+        spans = [(w.span[0], w.span[1], w.reason) for w in mod.waivers
+                 if w.category == category]
+        if spans:
+            out[os.path.abspath(f)] = spans
+    return out

@@ -1,0 +1,52 @@
+"""Pytest fixtures bridging the static waiver layer to the runtime guards.
+
+Loaded from the root ``tests/conftest.py`` via ``pytest_plugins``.  The
+statically waived ``allow[host-sync]`` statement spans become the
+runtime allowlist, so a sync is legal at runtime exactly where the
+linter was told it is legal in the source.
+"""
+from __future__ import annotations
+
+import os
+
+import pytest
+
+_REPO_ROOT = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..", ".."))
+_SRC_REPRO = os.path.join(_REPO_ROOT, "src", "repro")
+
+
+@pytest.fixture(scope="session")
+def lint_waived_sites():
+    """{abs path: [(start, end, reason)]} of allow[host-sync] waivers."""
+    from tools.lint import waived_spans
+
+    return waived_spans(_SRC_REPRO)
+
+
+@pytest.fixture
+def host_sync_sanitizer(lint_waived_sites):
+    """Factory: ``with host_sync_sanitizer() as log: ...`` fails the test
+    on any repro-code sync outside the statically waived sites."""
+    from repro.debug import host_sync_guard
+
+    def make(**kwargs):
+        return host_sync_guard(lint_waived_sites, **kwargs)
+
+    return make
+
+
+@pytest.fixture
+def recompile_guard():
+    """The `no_recompiles` context manager (budgeted compile counting)."""
+    from repro.debug import no_recompiles
+
+    return no_recompiles
+
+
+@pytest.fixture
+def transfer_sanitizer():
+    """The `no_implicit_transfers` context manager."""
+    from repro.debug import no_implicit_transfers
+
+    return no_implicit_transfers

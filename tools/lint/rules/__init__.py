@@ -1,0 +1,12 @@
+"""Rule registry: each rule module exposes RULE_ID, CATEGORY, run(index)."""
+from __future__ import annotations
+
+from . import (codec_registry, host_sync, jit_cache, kernel_dispatch,
+               tracer_control_flow)
+
+_ALL = (host_sync, jit_cache, codec_registry, kernel_dispatch,
+        tracer_control_flow)
+
+
+def all_rules():
+    return list(_ALL)

@@ -1,0 +1,142 @@
+"""Shared local taint analysis: which names plausibly hold traced/device
+arrays inside one function body.
+
+This is deliberately conservative-by-construction rather than sound: we
+taint values produced by the jax array namespaces (``jnp.*``, ``lax.*``,
+``jax.random.*`` …) and anything derived from them, and *untaint* the
+handful of attributes that are host scalars by contract (``.shape``,
+``.ndim``, ``.dtype``, ``.size``).  ``jax.device_get`` output is a host
+numpy value, so it never taints.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+#: attributes of an array that are static/host values, not arrays
+NONARRAY_ATTRS = {"shape", "ndim", "dtype", "size", "nbytes", "sharding",
+                  "device", "itemsize", "weak_type"}
+
+#: method calls on an array that yield host values, not arrays
+NONARRAY_METHODS = NONARRAY_ATTRS | {"item", "tolist", "to_py"}
+
+#: dotted-prefixes whose call results are treated as device arrays
+ARRAY_NAMESPACES = ("jax.numpy.", "jax.lax.", "jax.nn.", "jax.random.",
+                    "jax.scipy.", "jax.ops.")
+ARRAY_CALLS = {"jax.device_put", "jax.block_until_ready"}
+
+
+def own_nodes(root: ast.AST, *, into_classes: bool = False) -> List[ast.AST]:
+    """All AST nodes of `root`'s body, excluding nested function bodies
+    (they are analyzed as their own scopes).  Lambdas are kept — they
+    share the enclosing scope's locals."""
+    out: List[ast.AST] = []
+
+    def rec(n: ast.AST) -> None:
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return
+        if isinstance(n, ast.ClassDef) and not into_classes:
+            return
+        out.append(n)
+        for c in ast.iter_child_nodes(n):
+            rec(c)
+
+    for c in ast.iter_child_nodes(root):
+        rec(c)
+    return out
+
+
+def _target_names(t: ast.AST) -> List[str]:
+    if isinstance(t, ast.Name):
+        return [t.id]
+    if isinstance(t, (ast.Tuple, ast.List)):
+        out: List[str] = []
+        for e in t.elts:
+            out.extend(_target_names(e))
+        return out
+    if isinstance(t, ast.Starred):
+        return _target_names(t.value)
+    return []
+
+
+def arrayish(index, mod, expr: ast.AST, tainted: Set[str]) -> bool:
+    """Does `expr` plausibly evaluate to a traced/device array?"""
+    if isinstance(expr, ast.Name):
+        return expr.id in tainted
+    if isinstance(expr, ast.Attribute):
+        if expr.attr in NONARRAY_ATTRS:
+            return False
+        return arrayish(index, mod, expr.value, tainted)
+    if isinstance(expr, ast.Subscript):
+        return arrayish(index, mod, expr.value, tainted)
+    if isinstance(expr, ast.BinOp):
+        return (arrayish(index, mod, expr.left, tainted)
+                or arrayish(index, mod, expr.right, tainted))
+    if isinstance(expr, ast.UnaryOp):
+        return arrayish(index, mod, expr.operand, tainted)
+    if isinstance(expr, ast.Compare):
+        return (arrayish(index, mod, expr.left, tainted)
+                or any(arrayish(index, mod, c, tainted)
+                       for c in expr.comparators))
+    if isinstance(expr, ast.BoolOp):
+        return any(arrayish(index, mod, v, tainted) for v in expr.values)
+    if isinstance(expr, ast.IfExp):
+        return (arrayish(index, mod, expr.body, tainted)
+                or arrayish(index, mod, expr.orelse, tainted))
+    if isinstance(expr, ast.Call):
+        chain = index.attr_chain(mod, expr.func)
+        if chain is not None:
+            if chain == "jax.device_get":
+                return False            # host numpy out
+            if chain in ARRAY_CALLS:
+                return True
+            if any(chain.startswith(p) for p in ARRAY_NAMESPACES):
+                return True
+        if isinstance(expr.func, ast.Attribute):
+            # method on an array: x.astype(...), x.reshape(...), x.at[...]
+            if expr.func.attr in NONARRAY_METHODS:
+                return False
+            return arrayish(index, mod, expr.func.value, tainted)
+        return False
+    return False
+
+
+def tainted_names(index, fi, *, taint_params: bool = False) -> Set[str]:
+    """Fixed-point taint over `fi`'s assignments.  With `taint_params`,
+    non-static parameters seed the set (jit roots: params are tracers)."""
+    tainted: Set[str] = set()
+    if taint_params:
+        a = fi.node.args
+        for p in (list(getattr(a, "posonlyargs", [])) + a.args + a.kwonlyargs):
+            if p.arg not in fi.static_params and p.arg not in ("self", "cls"):
+                tainted.add(p.arg)
+    nodes = own_nodes(fi.node)
+    changed = True
+    while changed:
+        changed = False
+        for n in nodes:
+            targets, value = [], None
+            if isinstance(n, ast.Assign):
+                targets, value = n.targets, n.value
+            elif isinstance(n, (ast.AnnAssign, ast.AugAssign)):
+                targets, value = [n.target], n.value
+            elif isinstance(n, ast.NamedExpr):
+                targets, value = [n.target], n.value
+            elif isinstance(n, (ast.For, ast.comprehension)):
+                it = n.iter
+                if arrayish(index, fi.module, it, tainted):
+                    targets, value = [n.target], None
+                    for name in _target_names(n.target):
+                        if name not in tainted:
+                            tainted.add(name)
+                            changed = True
+                continue
+            if value is None:
+                continue
+            if arrayish(index, fi.module, value, tainted):
+                for t in targets:
+                    for name in _target_names(t):
+                        if name not in tainted:
+                            tainted.add(name)
+                            changed = True
+    return tainted

@@ -1,0 +1,164 @@
+"""R3: codec-registry completeness.
+
+Every ``register("<id>", factory)`` call in ``repro/codecs/`` must point
+at a class that statically implements the `Codec` protocol:
+
+* ``encode`` and ``decode`` defined (not inherited from the abstract
+  `Codec` base, whose versions raise);
+* the PR-4 sharded-encode surface — ``shard_axis`` **and**
+  ``payload_axes`` overridden (``encode_parts`` may use the generic
+  base loop) — **or** an explicit ``shardable = False`` class attribute
+  opting the codec out of split-stable encode;
+* header parameters passed to ``make_header`` / ``with_params`` /
+  ``Header`` must be JSON-representable: no dict/set displays, lambdas
+  or bytes literals (tuples are fine — they serialize as lists).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional
+
+from ..engine import Finding, Index, ModuleInfo
+
+RULE_ID = "R3-codec-registry"
+CATEGORY = "codec-registry"
+
+_ABSTRACT_BASE = "Codec"
+_HEADER_CALLS = {"make_header", "with_params", "Header"}
+
+
+def _class_defs(mod: ModuleInfo) -> Dict[str, ast.ClassDef]:
+    return {n.name: n for n in ast.walk(mod.tree)
+            if isinstance(n, ast.ClassDef)}
+
+
+def _resolve_class(index: Index, mod: ModuleInfo,
+                   name: str) -> Optional[ast.ClassDef]:
+    cd = _class_defs(mod).get(name)
+    if cd is not None:
+        return cd
+    if name in mod.from_names:
+        base, orig = mod.from_names[name]
+        target = index.find_module(base) if base else None
+        if target is not None:
+            return _class_defs(target).get(orig)
+    return None
+
+
+def _factory_class(index: Index, mod: ModuleInfo,
+                   factory: ast.AST) -> Optional[str]:
+    """Class name a register() factory constructs, best effort."""
+    if isinstance(factory, ast.Lambda):
+        body = factory.body
+        if isinstance(body, ast.Call) and isinstance(body.func, ast.Name):
+            return body.func.id
+    if isinstance(factory, ast.Attribute) and isinstance(factory.value,
+                                                         ast.Name):
+        return factory.value.id           # CuszCodec.make
+    if isinstance(factory, ast.Name):
+        return factory.id
+    return None
+
+
+def _own_names(index: Index, mod: ModuleInfo, cd: ast.ClassDef,
+               depth: int = 0) -> Dict[str, bool]:
+    """{name: True} of methods/attrs defined on `cd` or a concrete
+    ancestor (the abstract `Codec` base does not count)."""
+    names: Dict[str, bool] = {}
+    for n in cd.body:
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            names[n.name] = True
+        elif isinstance(n, ast.Assign):
+            for t in n.targets:
+                if isinstance(t, ast.Name):
+                    names[t.id] = True
+        elif isinstance(n, ast.AnnAssign) and isinstance(n.target, ast.Name):
+            names[n.target.id] = True
+    if depth < 4:
+        for b in cd.bases:
+            if isinstance(b, ast.Name) and b.id != _ABSTRACT_BASE:
+                parent = _resolve_class(index, mod, b.id)
+                if parent is not None:
+                    for k in _own_names(index, mod, parent, depth + 1):
+                        names.setdefault(k, True)
+    return names
+
+
+def _shardable_false(cd: ast.ClassDef) -> bool:
+    for n in cd.body:
+        val = None
+        if isinstance(n, ast.Assign) and any(
+                isinstance(t, ast.Name) and t.id == "shardable"
+                for t in n.targets):
+            val = n.value
+        elif (isinstance(n, ast.AnnAssign)
+              and isinstance(n.target, ast.Name)
+              and n.target.id == "shardable"):
+            val = n.value
+        if (isinstance(val, ast.Constant) and val.value is False):
+            return True
+    return False
+
+
+def _json_scalar(node: ast.AST) -> bool:
+    if isinstance(node, ast.Constant):
+        return not isinstance(node.value, bytes)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return all(_json_scalar(e) for e in node.elts)
+    if isinstance(node, (ast.Dict, ast.Set, ast.Lambda, ast.SetComp,
+                         ast.DictComp)):
+        return False
+    return True        # names/calls/arith: not statically decidable
+
+
+def run(index: Index) -> List[Finding]:
+    findings: List[Finding] = []
+    for mod in index.modules:
+        if "/codecs/" not in mod.path.replace("\\", "/"):
+            continue
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fname = (node.func.attr if isinstance(node.func, ast.Attribute)
+                     else node.func.id if isinstance(node.func, ast.Name)
+                     else None)
+            # header-params JSON check applies to any codec-module call
+            if fname in _HEADER_CALLS:
+                for kw in node.keywords:
+                    if kw.arg is not None and not _json_scalar(kw.value):
+                        findings.append(Finding(
+                            RULE_ID, mod.path, kw.value.lineno,
+                            kw.value.col_offset,
+                            f"header param `{kw.arg}` is not a JSON-scalar "
+                            "type (dict/set/lambda/bytes values do not "
+                            "survive the manifest round-trip)"))
+            if fname != "register" or len(node.args) < 2:
+                continue
+            if not (isinstance(node.args[0], ast.Constant)
+                    and isinstance(node.args[0].value, str)):
+                continue
+            codec_id = node.args[0].value
+            cls_name = _factory_class(index, mod, node.args[1])
+            cd = (_resolve_class(index, mod, cls_name)
+                  if cls_name is not None else None)
+            if cd is None:
+                findings.append(Finding(
+                    RULE_ID, mod.path, node.lineno, node.col_offset,
+                    f"codec `{codec_id}`: cannot statically resolve the "
+                    "factory to a class definition"))
+                continue
+            names = _own_names(index, mod, cd)
+            for required in ("encode", "decode"):
+                if required not in names:
+                    findings.append(Finding(
+                        RULE_ID, mod.path, cd.lineno, cd.col_offset,
+                        f"codec `{codec_id}` ({cd.name}) does not define "
+                        f"`{required}`"))
+            has_shard = "shard_axis" in names and "payload_axes" in names
+            if not has_shard and not _shardable_false(cd):
+                findings.append(Finding(
+                    RULE_ID, mod.path, cd.lineno, cd.col_offset,
+                    f"codec `{codec_id}` ({cd.name}) neither overrides the "
+                    "sharded-encode surface (`shard_axis` + `payload_axes`)"
+                    " nor opts out with `shardable = False`"))
+    return findings

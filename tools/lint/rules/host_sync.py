@@ -1,0 +1,75 @@
+"""R1: no host-sync calls in device-side code.
+
+Two tiers:
+
+* Inside functions **reachable from a jit/pallas region**, every sync
+  form is flagged: ``jax.device_get``, ``.item()``,
+  ``.block_until_ready()``, ``np.asarray``/``np.array`` on anything, and
+  ``float()``/``int()``/``bool()`` on values tainted as traced arrays.
+  A sync here either breaks tracing outright or silently forces a
+  device round-trip per call.
+* On **host paths** (everything else), only the *blocking* forms are
+  flagged — ``jax.device_get``, ``.block_until_ready()``, ``.item()``,
+  and ``float()/int()/bool()`` on tainted locals.  These are legal but
+  each one is a pipeline stall, so intentional ones must carry a
+  ``# repro-lint: allow[host-sync] <reason>`` waiver.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from ..engine import Finding, Index
+from ._taint import arrayish, own_nodes, tainted_names
+
+RULE_ID = "R1-host-sync"
+CATEGORY = "host-sync"
+
+_BLOCKING_CHAINS = {"jax.device_get", "jax.block_until_ready"}
+_NUMPY_PULL_CHAINS = {"numpy.asarray", "numpy.array"}
+_CAST_BUILTINS = {"float", "int", "bool", "complex"}
+
+
+def _sync_form(index, mod, call: ast.Call, tainted, *, jit_side: bool):
+    """Return a description of the sync this call performs, or None."""
+    chain = index.attr_chain(mod, call.func)
+    if chain in _BLOCKING_CHAINS:
+        return f"`{chain}`"
+    if isinstance(call.func, ast.Attribute):
+        if call.func.attr == "block_until_ready":
+            return "`.block_until_ready()`"
+        if call.func.attr == "item" and not call.args and not call.keywords:
+            return "`.item()`"
+    if jit_side and chain in _NUMPY_PULL_CHAINS:
+        return f"`{chain}` (device->host pull)"
+    if (isinstance(call.func, ast.Name)
+            and call.func.id in _CAST_BUILTINS
+            and len(call.args) == 1 and not call.keywords
+            and arrayish(index, mod, call.args[0], tainted)):
+        return f"`{call.func.id}()` on a traced/device value"
+    return None
+
+
+def run(index: Index) -> List[Finding]:
+    findings: List[Finding] = []
+    for mod in index.modules:
+        scopes = [(fi, own_nodes(fi.node)) for fi in mod.functions.values()]
+        scopes.append((None, own_nodes(mod.tree, into_classes=True)))
+        for fi, nodes in scopes:
+            jit_side = fi is not None and fi.jit_reachable
+            tainted = (tainted_names(index, fi, taint_params=fi.jit_root)
+                       if fi is not None else set())
+            where = (f"jit-reachable function `{fi.qualname}`" if jit_side
+                     else (f"host-path function `{fi.qualname}`"
+                           if fi is not None else "module level"))
+            for n in nodes:
+                if not isinstance(n, ast.Call):
+                    continue
+                form = _sync_form(index, mod, n, tainted, jit_side=jit_side)
+                if form is None:
+                    continue
+                kind = ("host sync" if jit_side else "blocking host sync")
+                findings.append(Finding(
+                    RULE_ID, mod.path, n.lineno, n.col_offset,
+                    f"{kind} {form} in {where}"))
+    return findings

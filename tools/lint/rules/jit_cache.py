@@ -1,0 +1,86 @@
+"""R2: no `jax.jit` constructed inside a function body without a cache.
+
+A `jax.jit(...)` built per call throws away the compilation cache every
+time — the serve-path re-jit bug fixed by hand in PR 5, generalized.
+Allowed shapes:
+
+* module-level ``step = jax.jit(fn)``;
+* any enclosing function carrying ``functools.lru_cache`` /
+  ``functools.cache`` (the jit object is memoized with its key);
+* assignment into a subscript, e.g. ``_cache[key] = jax.jit(fn)`` —
+  the module-dict-cache idiom used by `io/checkpoint._jitted_decode`;
+* ``self.attr = jax.jit(...)`` inside ``__init__`` (built once per
+  object, e.g. `train/trainer.Trainer`).
+
+Everything else needs a ``# repro-lint: allow[jit-cache] <reason>``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from ..engine import Finding, Index, JAX_JIT_CHAINS
+
+RULE_ID = "R2-jit-cache"
+CATEGORY = "jit-cache"
+
+_CACHE_DECOS = {"functools.lru_cache", "lru_cache", "functools.cache",
+                "cache"}
+
+
+def _has_cache_decorator(index: Index, mod, node) -> bool:
+    for deco in getattr(node, "decorator_list", []):
+        target = deco.func if isinstance(deco, ast.Call) else deco
+        if index.attr_chain(mod, target) in _CACHE_DECOS:
+            return True
+    return False
+
+
+def _enclosing_stmt(mod, node: ast.AST):
+    cur = node
+    while cur is not None and not isinstance(cur, ast.stmt):
+        cur = mod.parents.get(cur)
+    return cur
+
+
+def run(index: Index) -> List[Finding]:
+    findings: List[Finding] = []
+    for mod in index.modules:
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if index.attr_chain(mod, node.func) not in JAX_JIT_CHAINS:
+                continue
+            fi = mod.enclosing_function(node)
+            if fi is None:
+                continue                      # module level: fine
+            # any cached ancestor function memoizes the jit object
+            cached, cur = False, node
+            while cur is not None:
+                if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    if _has_cache_decorator(index, mod, cur):
+                        cached = True
+                        break
+                cur = mod.parents.get(cur)
+            if cached:
+                continue
+            stmt = _enclosing_stmt(mod, node)
+            if isinstance(stmt, ast.Assign):
+                targets = stmt.targets
+            elif isinstance(stmt, (ast.AnnAssign, ast.AugAssign)):
+                targets = [stmt.target]
+            else:
+                targets = []
+            if any(isinstance(t, ast.Subscript) for t in targets):
+                continue                      # dict-cache idiom
+            if (fi.node.name == "__init__"
+                    and any(isinstance(t, ast.Attribute)
+                            and isinstance(t.value, ast.Name)
+                            and t.value.id == "self" for t in targets)):
+                continue                      # built once per object
+            findings.append(Finding(
+                RULE_ID, mod.path, node.lineno, node.col_offset,
+                f"`jax.jit` constructed inside `{fi.qualname}` without a "
+                "cache (lru_cache / module-dict / self-attr-in-__init__); "
+                "a fresh jit per call recompiles every time"))
+    return findings

@@ -1,0 +1,125 @@
+"""R4: kernel-dispatch completeness.
+
+* Every ``kernels/<op>/`` directory that ships a ``kernel.py`` (a pallas
+  implementation) must register ``"pallas"`` in its
+  ``dispatch.register(...)`` call — a written-but-unregistered kernel is
+  dead code the auto policy can never pick.
+* Every op *without* a ``kernel.py`` must register ``impls=("jax",)``
+  **and** pass an explicit ``jax_only_reason=...`` so
+  ``resolve(impl="pallas")`` can raise an actionable error instead of
+  silently using the reference path.
+* Every stage named in ``dispatch.PIPELINE_STAGES`` must be registered
+  by some ``ops.py`` — a stage the pipeline policy resolves but nothing
+  registers fails at runtime.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, List, Optional, Tuple
+
+from ..engine import Finding, Index, ModuleInfo
+
+RULE_ID = "R4-kernel-dispatch"
+CATEGORY = "kernel-dispatch"
+
+
+def _register_calls(mod: ModuleInfo) -> List[ast.Call]:
+    out = []
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fname = (node.func.attr if isinstance(node.func, ast.Attribute)
+                 else node.func.id if isinstance(node.func, ast.Name)
+                 else None)
+        if fname == "register" and node.args \
+                and isinstance(node.args[0], ast.Constant) \
+                and isinstance(node.args[0].value, str):
+            out.append(node)
+    return out
+
+
+def _impls_of(call: ast.Call) -> Optional[Tuple[str, ...]]:
+    expr = None
+    if len(call.args) > 1:
+        expr = call.args[1]
+    for kw in call.keywords:
+        if kw.arg == "impls":
+            expr = kw.value
+    if expr is None:
+        return None                      # register() default
+    if isinstance(expr, (ast.Tuple, ast.List)) and all(
+            isinstance(e, ast.Constant) and isinstance(e.value, str)
+            for e in expr.elts):
+        return tuple(e.value for e in expr.elts)
+    return None
+
+
+def _jax_only_reason(call: ast.Call) -> Optional[str]:
+    for kw in call.keywords:
+        if kw.arg == "jax_only_reason":
+            if isinstance(kw.value, ast.Constant) and isinstance(
+                    kw.value.value, str) and kw.value.value.strip():
+                return kw.value.value
+            return ""
+    return None
+
+
+def run(index: Index) -> List[Finding]:
+    findings: List[Finding] = []
+    registered_names: Dict[str, str] = {}   # kernel name -> ops path
+    dispatch_mod: Optional[ModuleInfo] = None
+    for mod in index.modules:
+        norm = mod.path.replace("\\", "/")
+        if norm.endswith("kernels/dispatch.py"):
+            dispatch_mod = mod
+        if "/kernels/" not in norm or not norm.endswith("/ops.py"):
+            continue
+        op_dir = os.path.dirname(mod.path)
+        has_kernel = os.path.exists(os.path.join(op_dir, "kernel.py"))
+        calls = _register_calls(mod)
+        if not calls:
+            findings.append(Finding(
+                RULE_ID, mod.path, 1, 0,
+                "kernels ops module has no dispatch.register(...) call"))
+            continue
+        for call in calls:
+            name = call.args[0].value
+            registered_names[name] = mod.path
+            impls = _impls_of(call)
+            if has_kernel:
+                if impls is None or "pallas" not in impls:
+                    findings.append(Finding(
+                        RULE_ID, mod.path, call.lineno, call.col_offset,
+                        f"kernel `{name}` ships a kernel.py but does not "
+                        "register a 'pallas' impl — the pallas path is "
+                        "unreachable through dispatch"))
+            else:
+                if impls != ("jax",):
+                    findings.append(Finding(
+                        RULE_ID, mod.path, call.lineno, call.col_offset,
+                        f"kernel `{name}` has no kernel.py; it must "
+                        "register impls=('jax',) explicitly"))
+                reason = _jax_only_reason(call)
+                if reason is None or not reason.strip():
+                    findings.append(Finding(
+                        RULE_ID, mod.path, call.lineno, call.col_offset,
+                        f"jax-only kernel `{name}` must declare "
+                        "jax_only_reason=... so resolve(impl='pallas') "
+                        "raises an actionable error"))
+    if dispatch_mod is not None:
+        for node in ast.walk(dispatch_mod.tree):
+            if isinstance(node, ast.Assign) and any(
+                    isinstance(t, ast.Name) and t.id == "PIPELINE_STAGES"
+                    for t in node.targets):
+                if isinstance(node.value, (ast.Tuple, ast.List)):
+                    for e in node.value.elts:
+                        if isinstance(e, ast.Constant) \
+                                and isinstance(e.value, str) \
+                                and e.value not in registered_names:
+                            findings.append(Finding(
+                                RULE_ID, dispatch_mod.path, e.lineno,
+                                e.col_offset,
+                                f"pipeline stage `{e.value}` is not "
+                                "registered by any kernels/<op>/ops.py"))
+    return findings

@@ -1,0 +1,44 @@
+"""R5: no Python `if`/`while` on traced values inside jitted functions.
+
+Python control flow runs at trace time: a branch on a tracer raises
+`TracerBoolConversionError` at best, and at worst (via a cached
+`.aval`-dependent path) silently bakes one branch into the compiled
+program.  Inside a jit root, non-static parameters and everything
+derived from the jax array namespaces are traced; branching on them
+must go through `lax.cond` / `lax.while_loop` / `jnp.where`.
+
+Branches on *static* arguments (``static_argnames``) are fine — that is
+the standard impl-selection idiom in the kernels' ops wrappers.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from ..engine import Finding, Index
+from ._taint import arrayish, own_nodes, tainted_names
+
+RULE_ID = "R5-tracer-branch"
+CATEGORY = "tracer-branch"
+
+
+def run(index: Index) -> List[Finding]:
+    findings: List[Finding] = []
+    for mod in index.modules:
+        for fi in mod.functions.values():
+            if not fi.jit_root:
+                continue
+            tainted = tainted_names(index, fi, taint_params=True)
+            for n in own_nodes(fi.node):
+                if not isinstance(n, (ast.If, ast.While)):
+                    continue
+                if arrayish(index, mod, n.test, tainted):
+                    kw = "if" if isinstance(n, ast.If) else "while"
+                    findings.append(Finding(
+                        RULE_ID, mod.path, n.lineno, n.col_offset,
+                        f"Python `{kw}` on a traced value inside jitted "
+                        f"function `{fi.qualname}`; use lax.cond/"
+                        "lax.while_loop/jnp.where"))
+                # comprehension/ternary on tracers inside the test are
+                # covered by the same arrayish() walk above
+    return findings
