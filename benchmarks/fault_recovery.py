@@ -1,0 +1,130 @@
+"""Fault-recovery wall time: what each resilience mechanism costs.
+
+Per injected fault class, measures the recovery path end-to-end against
+its fault-free baseline:
+
+  * ``straggler_mitigation`` — modeled 8-host cluster with a 5x slow
+    host: steps until `MitigationPolicy` brings the step time within
+    1.25x of fault-free, plus the converged ratio;
+  * ``writer_retry``        — a transient (OSError-class) shard-write
+    failure absorbed by the AsyncWriter retry loop: committed-save wall
+    time vs the clean save;
+  * ``corrupt_fallback``    — restore with the newest step's shard
+    corrupted: quarantine + fall back to the previous step vs a clean
+    restore;
+  * ``nan_skip``            — the skip-and-log guard's per-step cost.
+
+Writes ``BENCH_fault.json`` records
+``{fault, seconds, baseline_s, derived}`` (seconds = recovery-path wall
+time).
+"""
+from __future__ import annotations
+
+import glob
+import os
+import tempfile
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist import chaos, fault
+from repro.io import checkpoint as CK
+from repro.io.async_writer import AsyncWriter
+from .common import emit, write_json
+
+JSON_NAME = "BENCH_fault.json"
+
+
+def _tree(small: bool, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    n = 64 if small else 512
+    return {"w": jnp.asarray(np.cumsum(rng.standard_normal((n, 1024)),
+                                       axis=-1).astype(np.float32)),
+            "step": jnp.asarray(np.int32(seed))}
+
+
+def _straggler(records, small: bool) -> None:
+    compute = 0.01
+    monkey = chaos.ChaosMonkey(chaos.ChaosConfig(
+        nhosts=8, straggler_host=3, straggler_delay_s=4 * compute))
+    policy = fault.MitigationPolicy(8)
+    steps = 8 if small else 30
+    ratios, recovered_at = [], None
+    for s in range(steps):
+        durs = monkey.host_step_times(s, compute, policy.shares)
+        policy.observe(s, durs)
+        ratios.append(float(durs.max()) / compute)
+        if recovered_at is None and ratios[-1] <= 1.25:
+            recovered_at = s
+    sec = ratios[-1] * compute
+    derived = (f"steps_to_recover={recovered_at} "
+               f"ratio {ratios[0]:.2f}->{ratios[-1]:.3f}")
+    emit("fault_straggler_mitigation", sec, derived)
+    records.append({"fault": "straggler_mitigation", "seconds": sec,
+                    "baseline_s": compute, "derived": derived})
+
+
+def _writer_retry(records, small: bool) -> None:
+    tree = _tree(small)
+
+    def committed_save(cfg):
+        with tempfile.TemporaryDirectory() as d, chaos.use_chaos(cfg):
+            t0 = time.perf_counter()
+            with AsyncWriter(max_pending=1, retries=2,
+                             backoff_s=0.005) as w:
+                CK.save_checkpoint(d, 0, tree, writer=w)
+                w.wait()
+            dt = time.perf_counter() - t0
+            assert CK.latest_step(d) == 0
+            return dt, w.n_retries
+
+    base, _ = committed_save(None)
+    sec, n_retries = committed_save(chaos.ChaosConfig(writer_failures=1))
+    derived = f"n_retries={n_retries} overhead={sec - base:+.4f}s"
+    emit("fault_writer_retry", sec, derived)
+    records.append({"fault": "writer_retry", "seconds": sec,
+                    "baseline_s": base, "derived": derived})
+
+
+def _corrupt_fallback(records, small: bool) -> None:
+    with tempfile.TemporaryDirectory() as d:
+        for s in (0, 1):
+            CK.save_checkpoint(d, s, _tree(small, seed=s), nshards=2)
+        t0 = time.perf_counter()
+        _, step = CK.load_checkpoint(d, _tree(small))
+        base = time.perf_counter() - t0
+        assert step == 1
+        chaos.corrupt_file(sorted(glob.glob(
+            os.path.join(d, "step_00000001", "shard_*.npz")))[0])
+        t0 = time.perf_counter()
+        _, step = CK.load_checkpoint(d, _tree(small))
+        sec = time.perf_counter() - t0
+        assert step == 0
+        nq = len(CK.LAST_RESTORE_STATS["quarantine"])
+        derived = f"quarantined={nq} fell_back_to=step0"
+        emit("fault_corrupt_fallback", sec, derived)
+        records.append({"fault": "corrupt_fallback", "seconds": sec,
+                        "baseline_s": base, "derived": derived})
+
+
+def _nan_skip(records, small: bool) -> None:
+    policy = fault.MitigationPolicy(8)
+    iters = 200 if small else 2000
+    t0 = time.perf_counter()
+    for s in range(iters):
+        policy.on_bad_loss(s, float("nan") if s % 10 == 0 else 1.0)
+    sec = (time.perf_counter() - t0) / iters
+    derived = f"skipped={policy.n_skipped}/{iters}"
+    emit("fault_nan_skip", sec, derived)
+    records.append({"fault": "nan_skip", "seconds": sec,
+                    "baseline_s": 0.0, "derived": derived})
+
+
+def main(small: bool = False, json_dir: str = ".") -> None:
+    records: list = []
+    _straggler(records, small)
+    _writer_retry(records, small)
+    _corrupt_fallback(records, small)
+    _nan_skip(records, small)
+    write_json(os.path.join(json_dir, JSON_NAME), records)

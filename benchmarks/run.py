@@ -11,6 +11,7 @@ seconds, GBps}).
   beyond   -> checkpoint (sync/async/sharded write path per codec)
   beyond   -> serve_latency (compressed-KV decode per token)
   beyond   -> reshard (prefill->decode handoff wire bytes per codec)
+  beyond   -> fault_recovery (chaos-injected fault recovery wall time)
 
 CLI:
   --only MOD[,MOD]   run a subset (e.g. --only throughput)
@@ -25,9 +26,9 @@ import inspect
 import sys
 import traceback
 
-from . import (checkpoint, chunksize, codebook, grad_compression,
-               huffman_repr, quality, rate_distortion, reshard, roofline,
-               serve_latency, throughput)
+from . import (checkpoint, chunksize, codebook, fault_recovery,
+               grad_compression, huffman_repr, quality, rate_distortion,
+               reshard, roofline, serve_latency, throughput)
 
 MODULES = [
     ("codebook", codebook),
@@ -40,6 +41,7 @@ MODULES = [
     ("checkpoint", checkpoint),
     ("serve_latency", serve_latency),
     ("reshard", reshard),
+    ("fault_recovery", fault_recovery),
     ("roofline", roofline),
 ]
 

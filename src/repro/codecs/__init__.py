@@ -23,9 +23,11 @@ and `to_arrays`/`from_arrays` bridge to npz-style field dicts.
 """
 from .base import (Codec, decode, get, get_block_codec,  # noqa: F401
                    names, register)
-from .container import (CONTAINER_FORMAT, Container, Header,  # noqa: F401
+from .container import (CONTAINER_FORMAT, ChecksumError,  # noqa: F401
+                        Container, Header, check_container,
                         concat_containers, from_arrays, make_header,
-                        to_arrays)
+                        payload_crc32, stamp_checksum, to_arrays,
+                        verify_container)
 
 # importing the implementation modules populates the registry
 from . import cusz as cusz            # noqa: F401
@@ -34,6 +36,8 @@ from . import lossless as lossless    # noqa: F401
 from . import zfp as zfp              # noqa: F401
 
 __all__ = ["Codec", "Container", "Header", "CONTAINER_FORMAT",
+           "ChecksumError", "check_container", "payload_crc32",
+           "stamp_checksum", "verify_container",
            "decode", "get", "get_block_codec", "names", "register",
            "to_arrays", "from_arrays", "make_header", "concat_containers",
            "cusz", "int8", "lossless", "zfp"]

@@ -25,7 +25,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .container import Container, Header, make_header
+from .container import (ChecksumError, Container, Header, check_container,
+                        make_header, stamp_checksum, verify_container)
 
 
 class Codec:
@@ -53,20 +54,26 @@ class Codec:
 
     # -- storage form (override when a denser packing exists) ---------------
     def pack(self, c: Container) -> Container:
-        """Host/storage form: numpy payload, `packed=True` in the header."""
+        """Host/storage form: numpy payload, `packed=True` plus a payload
+        crc32 (``checksum``) in the header."""
         if c.header.param("packed"):
             return c
         # repro-lint: allow[host-sync] pack() IS the device->storage boundary
         payload = {k: np.asarray(jax.device_get(v))
                    for k, v in c.payload.items()}
-        return Container(c.header.with_params(packed=True), payload)
+        return stamp_checksum(
+            Container(c.header.with_params(packed=True), payload))
 
     def unpack(self, c: Container) -> Container:
-        """Inverse of `pack`: device arrays, `packed` flag dropped."""
+        """Inverse of `pack`: device arrays, storage-only params dropped
+        (``checksum`` must not leak into device headers, which serve as
+        static jit cache keys)."""
         if not c.header.param("packed"):
             return c
         payload = {k: jnp.asarray(v) for k, v in c.payload.items()}
-        return Container(c.header.with_params(packed=False), payload)
+        return Container(
+            c.header.with_params(packed=False).without_params("checksum"),
+            payload)
 
     # -- shared helpers -----------------------------------------------------
     def _header(self, x, **params) -> Header:
@@ -166,10 +173,18 @@ def get_block_codec(name: str, *, axis: int, block: int) -> Codec:
             f"axis=/block= configuration (e.g. 'int8-block')") from None
 
 
-def decode(c: Container, *, like=None, **codec_kwargs) -> jax.Array:
+def decode(c: Container, *, like=None, verify: bool = False,
+           **codec_kwargs) -> jax.Array:
     """Decode a container by its own header — the codec id, version, dtype
     and shape all come from the container; nothing else is required.
-    `codec_kwargs` configure the decode-side codec (e.g. kernel_impl)."""
+    `codec_kwargs` configure the decode-side codec (e.g. kernel_impl).
+
+    ``verify=True`` checks the payload against the header's crc32 before
+    decoding and raises `ChecksumError` on mismatch — the restore paths
+    (checkpoint load, wire arrival) opt in; hot device-side paths skip
+    the host-side hash."""
+    if verify:
+        check_container(c)
     codec = get(c.header.codec, **codec_kwargs)
     if c.header.version > codec.version:
         raise ValueError(

@@ -16,12 +16,18 @@ host/storage view (npz-friendly field dict + JSON-able header).
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Any, Dict, Mapping, Tuple
 
 import jax
 import numpy as np
 
 CONTAINER_FORMAT = 1
+
+
+class ChecksumError(ValueError):
+    """A container's payload does not match its header checksum — the
+    bytes were corrupted somewhere between `pack` and now."""
 
 
 def _freeze(v):
@@ -64,6 +70,15 @@ class Header:
         items = [(k, v) for k, v in self.params if k not in kw]
         items += [(k, _freeze(v)) for k, v in kw.items()]
         return dataclasses.replace(self, params=tuple(sorted(items)))
+
+    def without_params(self, *keys: str) -> "Header":
+        """Return a header with `keys` removed from params.  `unpack`
+        uses this to drop storage-only params (``checksum``) so device
+        headers — and therefore jit cache keys — never vary with the
+        stored bytes."""
+        return dataclasses.replace(
+            self, params=tuple((k, v) for k, v in self.params
+                               if k not in keys))
 
     def to_json(self) -> Dict[str, Any]:
         return {"format": CONTAINER_FORMAT, "codec": self.codec,
@@ -131,6 +146,53 @@ class Container:
 
 
 # ---------------------------------------------------------------------------
+# Payload integrity (crc32 checksums, stamped by `Codec.pack`)
+# ---------------------------------------------------------------------------
+
+def payload_crc32(payload: Mapping[str, Any]) -> int:
+    """crc32 over the payload's canonical byte stream: sorted field names
+    with each field's dtype, shape and raw bytes.  Covering the metadata
+    too means a corrupted npz that swaps/reshapes a field — not just one
+    that flips data bytes — also fails verification."""
+    crc = 0
+    for k in sorted(payload):
+        # repro-lint: allow[host-sync] checksumming is a host/storage op
+        arr = np.ascontiguousarray(np.asarray(jax.device_get(payload[k])))
+        meta = f"{k}:{arr.dtype.str}:{arr.shape};".encode()
+        crc = zlib.crc32(arr.tobytes(), zlib.crc32(meta, crc))
+    return crc & 0xFFFFFFFF
+
+
+def stamp_checksum(c: "Container") -> "Container":
+    """Record the payload crc32 in the header (storage-form containers;
+    every `pack` implementation ends with this)."""
+    return c.replace(header=c.header.with_params(
+        checksum=payload_crc32(c.payload)))
+
+
+def verify_container(c: "Container") -> bool:
+    """True when the payload matches the header checksum.  Containers
+    without a checksum param (pre-checksum writers, device-form headers)
+    verify trivially — absence of evidence is not corruption."""
+    want = c.header.param("checksum")
+    return want is None or payload_crc32(c.payload) == int(want)
+
+
+def check_container(c: "Container") -> None:
+    """`verify_container`, but raising `ChecksumError` with the mismatch
+    detail — the restore-path spelling."""
+    want = c.header.param("checksum")
+    if want is None:
+        return
+    got = payload_crc32(c.payload)
+    if got != int(want):
+        raise ChecksumError(
+            f"container payload checksum mismatch for codec "
+            f"{c.header.codec!r} shape {c.header.shape}: header says "
+            f"{int(want):#010x}, payload hashes to {got:#010x}")
+
+
+# ---------------------------------------------------------------------------
 # Shard reassembly (payload-space concatenation)
 # ---------------------------------------------------------------------------
 
@@ -144,10 +206,16 @@ def concat_containers(parts, axis: int, field_axes: Mapping[str, Any]
     what moves between hosts is the codec's compressed payload, never the
     decoded array."""
     h0 = parts[0].header
+    # per-part checksums necessarily differ (different bytes) and do not
+    # describe the merged payload — exclude them from the compatibility
+    # check and drop them from the merged header
+    def _cmp(h):
+        return tuple((k, v) for k, v in h.params if k != "checksum")
     for p in parts[1:]:
-        if p.header.codec != h0.codec or p.header.params != h0.params:
+        if p.header.codec != h0.codec or _cmp(p.header) != _cmp(h0):
             raise ValueError(f"cannot concat containers with differing "
                              f"codec/params: {p.header} vs {h0}")
+    h0 = h0.without_params("checksum")
     shape = list(h0.shape)
     shape[axis] = sum(int(p.header.shape[axis]) for p in parts)
     payload: Dict[str, Any] = {}

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 from repro.core import compressor as CZ
 
 from .base import Codec, register
-from .container import Container
+from .container import Container, stamp_checksum
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,15 +73,16 @@ class CuszCodec(Codec):
             return c
         blob = CZ.CompressedBlob(**{f: c.payload[f]
                                     for f in CZ.CompressedBlob._fields})
-        return Container(c.header.with_params(packed=True),
-                         CZ.pack_blob(blob))
+        return stamp_checksum(Container(c.header.with_params(packed=True),
+                                        CZ.pack_blob(blob)))
 
     def unpack(self, c: Container) -> Container:
         if not c.header.param("packed"):
             return c
         blob = CZ.unpack_blob(dict(c.payload))
-        return Container(c.header.with_params(packed=False),
-                         dict(zip(CZ.CompressedBlob._fields, blob)))
+        return Container(
+            c.header.with_params(packed=False).without_params("checksum"),
+            dict(zip(CZ.CompressedBlob._fields, blob)))
 
     def valid(self, c: Container) -> bool:
         """False when the sparse outlier store overflowed its capacity

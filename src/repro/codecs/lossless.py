@@ -15,7 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .base import Codec, register
-from .container import Container
+from .container import Container, stamp_checksum
 
 _UINT_OF = {1: np.uint8, 2: np.uint16, 4: np.uint32, 8: np.uint64}
 
@@ -39,7 +39,8 @@ class LosslessCodec(Codec):
         arr = np.asarray(jax.device_get(c.payload["data"]))
         if arr.dtype.kind not in "biufc":          # e.g. ml_dtypes bfloat16
             arr = arr.view(_UINT_OF[arr.dtype.itemsize])
-        return Container(c.header.with_params(packed=True), {"data": arr})
+        return stamp_checksum(
+            Container(c.header.with_params(packed=True), {"data": arr}))
 
     def unpack(self, c: Container) -> Container:
         if not c.header.param("packed"):
@@ -48,8 +49,9 @@ class LosslessCodec(Codec):
         want = np.dtype(c.header.dtype)
         if arr.dtype != want and arr.dtype.itemsize == want.itemsize:
             arr = arr.view(want)                   # undo the storage bitcast
-        return Container(c.header.with_params(packed=False),
-                         {"data": jnp.asarray(arr)})
+        return Container(
+            c.header.with_params(packed=False).without_params("checksum"),
+            {"data": jnp.asarray(arr)})
 
     # -- sharded encode: identity is trivially split-stable
     def shard_axis(self, shape, nshards: int):

@@ -229,11 +229,24 @@ def kv_wire_encode(x, seq_axis: int, *, wire: str = "int8-block",
         parts = codec.encode_parts(x, seq_axis, n)
     else:
         step = x.shape[seq_axis] // n
-        parts = [_encode_slab(codec,
-                              _slice_axis(x, seq_axis, i * step,
-                                          (i + 1) * step), seq_axis)
-                 for i in range(n)]
-    return tuple(codec.pack(p) for p in parts) if pack else tuple(parts)
+        parts = []
+        for i in range(n):
+            slab = _slice_axis(x, seq_axis, i * step, (i + 1) * step)
+            c = _encode_slab(codec, slab, seq_axis)
+            if wire != "lossless" and not codec.valid(c):
+                # graceful degradation: a slab the codec cannot represent
+                # faithfully (cusz outlier overflow) ships raw instead of
+                # aborting the handoff; the decode side reads each part's
+                # own header, so mixed slabs restore transparently
+                c = _encode_slab(codecs.get("lossless"), slab, seq_axis)
+            parts.append(c)
+
+    def _pack(p):
+        own = codec if p.header.codec == codec.name \
+            else codecs.get(p.header.codec)
+        return own.pack(p)
+
+    return tuple(_pack(p) for p in parts) if pack else tuple(parts)
 
 
 def kv_wire_adopt(parts: Sequence, seq_axis: int) -> QuantKV:

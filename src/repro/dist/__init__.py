@@ -1,4 +1,4 @@
 """Distribution substrate: mesh/spec context, sharding rules, fault
 tolerance.  ``context`` is a no-op off-mesh so the same model/train code
 runs on one CPU device and on the production pod meshes."""
-from repro.dist import context, fault, sharding  # noqa: F401
+from repro.dist import chaos, context, fault, sharding  # noqa: F401

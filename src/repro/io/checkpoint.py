@@ -41,6 +41,8 @@ import dataclasses
 import json
 import os
 import shutil
+import zipfile
+import zlib
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -64,9 +66,31 @@ _SHARD_FMT = "shard_{:05d}.npz"
 _JIT_DECODE = frozenset({"lossless", "int8", "int16", "int8-block"})
 
 #: telemetry of the most recent `load_checkpoint` call: step, manifest
-#: format, saved shard count, and the restore-leg wire accounting
-#: (bytes that moved host->device in container form vs. raw size).
+#: format, saved shard count, the restore-leg wire accounting (bytes
+#: that moved host->device in container form vs. raw size), and — when
+#: corrupted steps were skipped — a ``quarantine`` list of structured
+#: per-step corruption reports.
 LAST_RESTORE_STATS: Dict[str, Any] = {}
+
+_QUARANTINE_MARK = "QUARANTINE.json"
+
+
+class CheckpointCorruptionError(RuntimeError):
+    """A checkpoint step failed integrity verification (bad zip, payload
+    checksum mismatch, missing/garbled manifest).  Carries the structured
+    per-step ``reports`` that restore accumulated before giving up."""
+
+    def __init__(self, msg: str, reports: List[Dict[str, Any]]):
+        super().__init__(msg)
+        self.reports = reports
+
+
+#: error classes that mean "these bytes are damaged", as opposed to
+#: "this checkpoint is from an incompatible writer" (format-gate
+#: ValueErrors, which must propagate, not quarantine).
+_CORRUPTION_ERRORS = (codecs.ChecksumError, zipfile.BadZipFile, zlib.error,
+                      OSError, EOFError, KeyError,
+                      json.JSONDecodeError)
 
 _default_writer: Optional[AsyncWriter] = None
 
@@ -266,8 +290,18 @@ def _encode_tree(flat: Dict[str, Any], policy: CheckpointPolicy,
 
 def _write_shard(path: str, arrays: Dict[str, np.ndarray]) -> None:
     """One host's shard file.  Module-level so crash-consistency tests
-    can inject failures mid-save."""
+    can inject failures mid-save.  Consults the ambient chaos monkey
+    (`dist.chaos`): armed write faults raise here (retried/ surfaced by
+    the writer) or silently damage the file after the write (caught by
+    container checksums at restore)."""
+    from repro.dist import chaos
+    monkey = chaos.current()
+    if monkey is not None:
+        monkey.pre_write(path)
     np.savez(path, **arrays)
+    if monkey is not None:
+        # np.savez appends .npz when the target has no extension
+        monkey.post_write(path if os.path.exists(path) else path + ".npz")
 
 
 def _write_step(ckpt_dir: str, step: int, plans: Sequence[_LeafPlan],
@@ -348,14 +382,36 @@ def save_checkpoint(ckpt_dir: str, step: int, tree, mode: Optional[str] = None,
     return _write_step(ckpt_dir, step, plans, policy.codec, int(nshards))
 
 
-def latest_step(ckpt_dir: str) -> Optional[int]:
-    """Newest *complete* step (in-flight ``.tmp_step_*`` dirs from a
-    crashed or still-running save are never visible here)."""
+def available_steps(ckpt_dir: str) -> List[int]:
+    """Complete, non-quarantined steps, ascending.  In-flight
+    ``.tmp_step_*`` dirs and steps carrying a ``QUARANTINE.json`` marker
+    (written when restore hit corruption there) are excluded."""
     if not os.path.isdir(ckpt_dir):
-        return None
-    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
-             if d.startswith("step_")]
-    return max(steps) if steps else None
+        return []
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        if not name.startswith("step_"):
+            continue
+        if os.path.exists(os.path.join(ckpt_dir, name, _QUARANTINE_MARK)):
+            continue
+        steps.append(int(name.split("_")[1]))
+    return sorted(steps)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    """Newest complete, non-quarantined step."""
+    steps = available_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def _mark_quarantined(step_dir: str, report: Dict[str, Any]) -> None:
+    """Drop the quarantine marker (best-effort: a read-only checkpoint
+    store still falls back correctly, it just re-detects next time)."""
+    try:
+        with open(os.path.join(step_dir, _QUARANTINE_MARK), "w") as f:
+            json.dump(report, f, indent=2)
+    except OSError:
+        pass
 
 
 # ---------------------------------------------------------------------------
@@ -372,15 +428,21 @@ def _container_fields(arrays, prefix: str) -> Dict[str, np.ndarray]:
             if k.startswith(prefix)}
 
 
-def _assemble_v3(d: str, key: str, entry, shard_files):
+def _assemble_v3(d: str, key: str, entry, shard_files, verify: bool):
     """Read a tensor's shard parts and merge them into one container, or
-    (when the codec has no payload-space concat) a decoded host array."""
+    (when the codec has no payload-space concat) a decoded host array.
+    With ``verify`` each part's payload is checked against its header
+    crc32 *before* merge/decode — corruption surfaces as `ChecksumError`
+    at the damaged part, not as garbage weights."""
     parts = []
     for i, sh in enumerate(entry["shards"]):
         arrays = shard_files(int(sh["shard"]))
         prefix = _SEP.join((key, _FIELD_MARK, str(i), ""))
-        parts.append(codecs.from_arrays(sh["header"],
-                                        _container_fields(arrays, prefix)))
+        part = codecs.from_arrays(sh["header"],
+                                  _container_fields(arrays, prefix))
+        if verify:
+            codecs.check_container(part)
+        parts.append(part)
     if len(parts) == 1:
         return parts[0]
     codec = codecs.get(entry["codec"])
@@ -446,20 +508,14 @@ def _jitted_decode(codec: codecs.Codec, like, shd, postslice: int = 0):
     return _decode_fn_cache[key]
 
 
-def load_checkpoint(ckpt_dir: str, template, step: Optional[int] = None,
-                    shardings=None, kernel_impl: Optional[str] = None):
-    """template: pytree with the target treedef (e.g. fresh init or
-    eval_shape).  shardings: optional matching pytree of NamedSharding
-    for elastic placement on the current mesh — reassembly then decodes
-    jitted on-device with the new placement, moving the stored
-    *containers* host->device rather than decoded arrays.  kernel_impl:
-    dispatch policy for the cusz decode path (None = ambient/auto)."""
+def _load_step(d: str, step: int, template, shardings,
+               kernel_impl: Optional[str], verify: bool):
+    """Load one specific step dir; returns ``(tree, stats)``.  Raises one
+    of `_CORRUPTION_ERRORS` when the bytes are damaged (the caller's
+    quarantine loop handles those) or ValueError for format-gate
+    mismatches (which must propagate)."""
     from repro.dist import context as dist_ctx
 
-    if step is None:
-        step = latest_step(ckpt_dir)
-        assert step is not None, f"no checkpoints under {ckpt_dir}"
-    d = os.path.join(ckpt_dir, f"step_{step:08d}")
     with open(os.path.join(d, "manifest.json")) as f:
         manifest = json.load(f)
     fmt = manifest.get("format", 1)
@@ -494,9 +550,12 @@ def load_checkpoint(ckpt_dir: str, template, step: Optional[int] = None,
     def assemble(key, entry):
         if fmt == 2:
             prefix = _SEP.join((key, _FIELD_MARK, ""))
-            return codecs.from_arrays(
+            cont = codecs.from_arrays(
                 entry["header"], _container_fields(v2_arrays(), prefix))
-        return _assemble_v3(d, key, entry, shard_files)
+            if verify:
+                codecs.check_container(cont)
+            return cont
+        return _assemble_v3(d, key, entry, shard_files, verify)
 
     def place(key, entry, leaf, shd):
         got = assemble(key, entry)
@@ -544,6 +603,59 @@ def load_checkpoint(ckpt_dir: str, template, step: Optional[int] = None,
     for (path, leaf), shd in zip(leaves_with_path, shard_leaves):
         key = _leaf_key(path)
         out.append(place(key, manifest["tensors"][key], leaf, shd))
+    return jax.tree_util.tree_unflatten(treedef, out), stats
+
+
+def load_checkpoint(ckpt_dir: str, template, step: Optional[int] = None,
+                    shardings=None, kernel_impl: Optional[str] = None,
+                    verify: bool = True, quarantine: bool = True):
+    """template: pytree with the target treedef (e.g. fresh init or
+    eval_shape).  shardings: optional matching pytree of NamedSharding
+    for elastic placement on the current mesh — reassembly then decodes
+    jitted on-device with the new placement, moving the stored
+    *containers* host->device rather than decoded arrays.  kernel_impl:
+    dispatch policy for the cusz decode path (None = ambient/auto).
+
+    ``verify`` (default on) checks every stored container payload
+    against its header crc32.  ``quarantine`` (default on) makes
+    corruption non-fatal: the damaged step dir gets a ``QUARANTINE.json``
+    marker with a structured report, restore falls back to the newest
+    older good step, and the per-step reports land in
+    ``LAST_RESTORE_STATS["quarantine"]``.  With ``quarantine=False``
+    corruption raises `CheckpointCorruptionError` immediately."""
+    candidates = available_steps(ckpt_dir)
+    if step is not None:
+        candidates = [s for s in candidates if s <= step]
+        if step not in candidates:
+            candidates.append(step)      # explicit step: always tried first
+    else:
+        assert candidates, f"no checkpoints under {ckpt_dir}"
+    reports: List[Dict[str, Any]] = []
+    for s in sorted(set(candidates), reverse=True):
+        d = os.path.join(ckpt_dir, f"step_{s:08d}")
+        try:
+            tree, stats = _load_step(d, s, template, shardings,
+                                     kernel_impl, verify)
+        except _CORRUPTION_ERRORS as e:
+            report = {"step": int(s), "dir": d,
+                      "error_type": type(e).__name__, "error": str(e)}
+            reports.append(report)
+            if not quarantine:
+                LAST_RESTORE_STATS.clear()
+                LAST_RESTORE_STATS.update({"quarantine": reports})
+                raise CheckpointCorruptionError(
+                    f"checkpoint step {s} under {ckpt_dir} is corrupted: "
+                    f"{type(e).__name__}: {e}", reports) from e
+            _mark_quarantined(d, report)
+            continue
+        if reports:
+            stats["quarantine"] = reports
+        LAST_RESTORE_STATS.clear()
+        LAST_RESTORE_STATS.update(stats)
+        return tree, s
     LAST_RESTORE_STATS.clear()
-    LAST_RESTORE_STATS.update(stats)
-    return jax.tree_util.tree_unflatten(treedef, out), step
+    LAST_RESTORE_STATS.update({"quarantine": reports})
+    raise CheckpointCorruptionError(
+        f"no loadable checkpoint under {ckpt_dir}: "
+        f"{len(reports)} candidate step(s) all failed integrity checks "
+        f"({[r['step'] for r in reports]})", reports)

@@ -1,1 +1,4 @@
-from . import mesh  # noqa: F401  (dryrun NOT imported here: it sets XLA_FLAGS)
+from . import env, mesh  # noqa: F401  (dryrun NOT imported here: it sets
+#                                      XLA_FLAGS at import; env only mutates
+#                                      the environment when setup_runtime()
+#                                      is called)

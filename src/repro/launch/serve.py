@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
+from repro.launch import env as launch_env
 from repro.models import model as M
 from repro.serve.engine import (LAST_HANDOFF_STATS, LAST_RESHARD_STATS,
                                 ServeConfig, decode_tokens, encode_handoff,
@@ -42,8 +43,10 @@ def main():
                     choices=["int8-block", "cusz", "lossless"],
                     help="prefill->decode handoff wire codec")
     ap.add_argument("--temperature", type=float, default=0.0)
+    launch_env.add_arguments(ap)
     args = ap.parse_args()
 
+    launch_env.setup_runtime(launch_env.from_args(args))
     cfg = configs.reduced(args.arch) if args.reduced else configs.get(args.arch)
     params = M.init_params(jax.random.PRNGKey(0), cfg)
     rng = np.random.default_rng(0)

@@ -20,9 +20,11 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import configs
 from repro.data import pipeline
+from repro.dist import chaos, fault
 from repro.dist import sharding as SH
 from repro.dist.context import use_mesh, use_param_specs
 from repro.io import checkpoint as ckpt_io
+from repro.launch import env as launch_env
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models import model as M
 from repro.optim import adamw
@@ -53,8 +55,17 @@ def main():
                     help="per-host shard files per step "
                          "(default: jax.process_count())")
     ap.add_argument("--lower-only", action="store_true")
+    ap.add_argument("--chaos", default=None,
+                    help="fault-injection spec, e.g. "
+                         "'straggler:host=1,delay=0.05;writer:failures=2' "
+                         "(see repro.dist.chaos.from_spec)")
+    ap.add_argument("--mitigate", action="store_true",
+                    help="arm the straggler MitigationPolicy (rebalance/"
+                         "exclude flagged hosts, skip NaN steps)")
+    launch_env.add_arguments(ap)
     args = ap.parse_args()
 
+    launch_env.setup_runtime(launch_env.from_args(args))
     cfg = configs.reduced(args.arch) if args.reduced else configs.get(args.arch)
     mesh = make_host_mesh() if args.mesh == "host" else \
         make_production_mesh(multi_pod=args.mesh == "multi")
@@ -96,24 +107,47 @@ def main():
             start += 1
             print(f"resumed from step {start}")
         writer = None if args.checkpoint_sync or not args.checkpoint_dir \
-            else ckpt_io.AsyncWriter(max_pending=1)
+            else ckpt_io.AsyncWriter(max_pending=1, retries=2)
+        nhosts = max(1, jax.process_count())
+        chaos_cfg = (chaos.from_spec(args.chaos, nhosts=nhosts)
+                     if args.chaos else None)
+        policy = (fault.MitigationPolicy(
+                      chaos_cfg.nhosts if chaos_cfg is not None else nhosts)
+                  if args.mitigate else None)
         try:
-            for step in range(start, args.steps):
-                batch = pipeline.global_batch(mesh, cfg.vocab, args.batch,
-                                              args.seq, step, podded=podded)
-                t0 = time.perf_counter()
-                loss, params, opt = step_fn(params, opt, batch)
-                loss.block_until_ready()  # repro-lint: allow[host-sync] step-time fence
-                dt = time.perf_counter() - t0
-                if step % 5 == 0 or step == args.steps - 1:
-                    tps = args.batch * args.seq / dt
-                    print(f"step {step:5d}  loss {float(loss):.4f}  "
-                          f"{dt * 1e3:7.1f} ms  {tps:9.0f} tok/s")
-                if args.checkpoint_dir and (step + 1) % args.checkpoint_every == 0:
-                    ckpt_io.save_checkpoint(
-                        args.checkpoint_dir, step, (params, opt),
-                        policy=ckpt_io.CheckpointPolicy(codec="cusz"),
-                        nshards=args.checkpoint_shards, writer=writer)
+            with chaos.use_chaos(chaos_cfg) as monkey:
+                for step in range(start, args.steps):
+                    batch = pipeline.global_batch(mesh, cfg.vocab, args.batch,
+                                                  args.seq, step, podded=podded)
+                    t0 = time.perf_counter()
+                    loss, params, opt = step_fn(params, opt, batch)
+                    loss.block_until_ready()  # repro-lint: allow[host-sync] step-time fence
+                    dt = time.perf_counter() - t0
+                    if monkey is not None:
+                        shares = policy.shares if policy is not None else None
+                        dt, host_dts = monkey.inject_step(step, dt, shares)
+                        if policy is not None:
+                            policy.observe(step, host_dts)
+                    bad = ((monkey is not None and monkey.nan_burst(step))
+                           or fault.loss_is_bad(loss))
+                    if bad and policy is not None:
+                        policy.on_bad_loss(step, float("nan"))
+                        print(f"step {step:5d}  skipped (bad loss)")
+                        continue
+                    if step % 5 == 0 or step == args.steps - 1:
+                        tps = args.batch * args.seq / dt
+                        extra = ""
+                        if policy is not None and (policy.excluded
+                                                   or policy.events):
+                            extra = (f"  shares={[round(float(s), 3) for s in policy.shares]}"
+                                     f"  excluded={sorted(policy.excluded)}")
+                        print(f"step {step:5d}  loss {float(loss):.4f}  "
+                              f"{dt * 1e3:7.1f} ms  {tps:9.0f} tok/s{extra}")
+                    if args.checkpoint_dir and (step + 1) % args.checkpoint_every == 0:
+                        ckpt_io.save_checkpoint(
+                            args.checkpoint_dir, step, (params, opt),
+                            policy=ckpt_io.CheckpointPolicy(codec="cusz"),
+                            nshards=args.checkpoint_shards, writer=writer)
         finally:
             if writer is not None:
                 writer.close()     # drain + surface any async write failure

@@ -197,7 +197,7 @@ def encode_handoff(caches: M.DecodeCaches, cfg: ModelConfig,
     wire = wire or dist_ctx.kv_reshard_codec() or "int8-block"
     item = np.dtype(jnp.bfloat16).itemsize
     stats = {"wire": wire, "tensors": 0, "containers": 0,
-             "wire_bytes": 0, "raw_bf16_bytes": 0}
+             "wire_bytes": 0, "raw_bf16_bytes": 0, "lossless_fallback": 0}
 
     def account(parts, raw_bytes):
         stats["tensors"] += 1
@@ -211,6 +211,11 @@ def encode_handoff(caches: M.DecodeCaches, cfg: ModelConfig,
         parts = KVC.kv_wire_encode(
             x, HANDOFF_SEQ_AXIS, wire=wire, nslabs=nslabs,
             source_dtype=scfg.compute_dtype, wire_cfg=wire_cfg)
+        if wire != "lossless":
+            # slabs the wire codec could not represent faithfully were
+            # re-encoded raw by kv_wire_encode (graceful degradation)
+            stats["lossless_fallback"] += sum(
+                1 for p in parts if p.header.codec == "lossless")
         return account(parts, int(n) * item)
 
     lossless = codecs.get("lossless")
@@ -285,7 +290,13 @@ def reshard_caches(handoff: KVHandoff, cfg: ModelConfig, scfg: ServeConfig,
     def arrive(parts):
         """One cache tensor's wire containers -> its decode-side form."""
         stats["tensors"] += 1
-        wire_name = parts[0].header.codec
+        # a slab that failed wire-codec validation arrives as "lossless";
+        # adoption/payload-concat need a homogeneous wire, so any mix
+        # routes through the per-part decode path (kv_wire_restore reads
+        # each part's own header)
+        part_codecs = {p.header.codec for p in parts}
+        wire_name = (parts[0].header.codec if len(part_codecs) == 1
+                     else "mixed")
         full_shape = list(KVC.kv_slab_shape(parts[0]))
         full_shape[HANDOFF_SEQ_AXIS] = sum(
             int(KVC.kv_slab_shape(p)[HANDOFF_SEQ_AXIS]) for p in parts)

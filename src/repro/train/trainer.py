@@ -15,7 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data import pipeline
-from repro.dist import fault
+from repro.dist import chaos, fault
 from repro.io import checkpoint as ckpt_io
 from repro.models import model as M
 from repro.models.config import ModelConfig
@@ -39,6 +39,13 @@ class LoopConfig:
     # compute; submit blocks only when the writer falls behind
     checkpoint_async: bool = True
     checkpoint_nshards: Optional[int] = None   # None = jax.process_count()
+    # transient write failures (OSError class) retry on the writer thread
+    # with exponential backoff before surfacing
+    writer_retries: int = 2
+    # straggler mitigation: a `fault.MitigationPolicy` rebalances work
+    # shares away from flagged hosts and skip-and-logs NaN losses; None
+    # keeps detection-only behavior (the PR 5 watchdog)
+    mitigation: Optional[fault.MitigationPolicy] = None
     log_every: int = 10
 
 
@@ -68,8 +75,11 @@ class Trainer:
         # writer-fell-behind barrier) instead of growing an unbounded
         # backlog of device snapshots; scoped to this run so the worker
         # thread never outlives it
-        writer = (ckpt_io.AsyncWriter(max_pending=1)
+        writer = (ckpt_io.AsyncWriter(max_pending=1,
+                                      retries=lc.writer_retries)
                   if lc.checkpoint_async and lc.checkpoint_dir else None)
+        monkey = chaos.current()
+        policy = lc.mitigation
         try:
             for step in range(start, lc.steps):
                 toks = jnp.asarray(pipeline.host_batch(
@@ -78,8 +88,21 @@ class Trainer:
                 loss, params, opt = self.step_fn(params, opt, toks)
                 loss.block_until_ready()  # repro-lint: allow[host-sync] straggler timer fence
                 dt = time.perf_counter() - t0
+                if monkey is not None:
+                    # armed chaos: the step wall time becomes the simulated
+                    # cluster's (real sleep), and per-host durations feed
+                    # the mitigation policy's rebalancing
+                    shares = policy.shares if policy is not None else None
+                    dt, host_dts = monkey.inject_step(step, dt, shares)
+                    if policy is not None:
+                        policy.observe(step, host_dts)
                 slow = self.straggler.observe(step, dt)
-                if fault.loss_is_bad(loss):
+                loss_val = (float("nan")
+                            if monkey is not None and monkey.nan_burst(step)
+                            else loss)
+                bad = (policy.on_bad_loss(step, loss_val)
+                       if policy is not None else fault.loss_is_bad(loss_val))
+                if bad:
                     # NaN guard: restore last good state, skip this step's data
                     if last_good is not None:
                         params, opt = last_good

@@ -258,6 +258,17 @@ class TestSelfDescribingContainer:
 
 
 class TestDeprecationShims:
+    @pytest.fixture(autouse=True)
+    def _fresh_warn_once(self):
+        """`warn_once` is process-wide: the parity tests above call the
+        same shims (via _quiet, which suppresses but still *consumes*
+        the one warning), so re-arm the keys this class asserts on."""
+        from repro import _compat
+        for key in ("cusz_compress_gradient", "cusz_decompress_gradient",
+                    "kv_offload_pack", "kv_offload_restore",
+                    "save_checkpoint-mode"):
+            _compat._WARNED.discard(key)
+
     def test_cusz_gradient_shims_warn_and_work(self):
         g = _field((40, 130), seed=14) * 1e-3
         cfg = CZ.CompressorConfig(eb=1e-5, eb_mode="valrel", chunk_size=512,

@@ -316,6 +316,90 @@ print("ELASTIC_OK")
 """
 
 
+RESILIENCE_SCRIPT = r"""
+import glob, os, tempfile, time
+from repro.launch import env as launch_env
+launch_env.setup_runtime(launch_env.RuntimeConfig(host_device_count=8))
+import jax, jax.numpy as jnp, numpy as np
+from repro import configs
+from repro.dist import chaos, fault, sharding as SH
+from repro.dist.context import use_mesh, use_param_specs
+from repro.io import checkpoint as CK
+from repro.models import model as M
+from repro.optim import adamw
+from repro.train.train_step import TrainConfig, make_train_step
+from repro.data import pipeline
+
+assert jax.device_count() == 8, jax.devices()
+cfg = configs.reduced("qwen2.5-3b", n_periods=1)
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+params = M.init_params(jax.random.PRNGKey(0), cfg)
+pspecs = SH.param_specs(params, mesh)
+pshard = SH.param_shardings(params, mesh)
+tcfg = TrainConfig(microbatches=2, adamw=adamw.AdamWConfig(lr=5e-3))
+p = jax.device_put(params, pshard)
+opt = adamw.init(p, tcfg.adamw)
+
+with use_mesh(mesh), use_param_specs(pspecs):
+    step_fn = jax.jit(make_train_step(cfg, tcfg))
+    # fault-free baseline: median compiled-step wall time
+    warm = []
+    for s in range(4):
+        toks = pipeline.global_batch(mesh, cfg.vocab, 8, 32, s)
+        t0 = time.perf_counter()
+        loss, p, opt = step_fn(p, opt, toks)
+        loss.block_until_ready()
+        warm.append(time.perf_counter() - t0)
+    base = float(np.median(warm[1:]))        # drop the compile step
+
+    # -- leg 1: injected slow host, mitigation recovers wall-clock -------
+    ccfg = chaos.ChaosConfig(nhosts=8, straggler_host=3,
+                             straggler_delay_s=4.0 * base)
+    policy = fault.MitigationPolicy(8)
+    ratios = []
+    with chaos.use_chaos(ccfg) as monkey:
+        for s in range(4, 16):
+            toks = pipeline.global_batch(mesh, cfg.vocab, 8, 32, s)
+            loss, p, opt = step_fn(p, opt, toks)
+            loss.block_until_ready()
+            # the injected delay is a real sleep; model compute at the
+            # stable baseline so the recovery ratio is well-defined
+            total, host_dts = monkey.inject_step(s, base, policy.shares)
+            policy.observe(s, host_dts)
+            ratios.append(total / base)
+            assert not (policy.on_bad_loss(s, float(loss)))
+    assert ratios[0] >= 3.0, ratios          # the fault was real
+    assert max(ratios[-3:]) <= 1.25, ratios  # recovered within ~1.2x
+    assert any(e["kind"] == "rebalance" for e in policy.events)
+    assert not policy.excluded
+
+# -- leg 2: corrupted checkpoint shard restores from last good step -----
+with tempfile.TemporaryDirectory() as d:
+    CK.save_checkpoint(d, 0, (p, opt),
+                       policy=CK.CheckpointPolicy(codec="lossless"),
+                       nshards=2)
+    CK.save_checkpoint(d, 1, (p, opt),
+                       policy=CK.CheckpointPolicy(codec="lossless"),
+                       nshards=2)
+    shard = sorted(glob.glob(os.path.join(d, "step_00000001", "*.npz")))[0]
+    chaos.corrupt_file(shard)
+    (p2, opt2), step = CK.load_checkpoint(d, (p, opt))
+    assert step == 0, step
+    reports = CK.LAST_RESTORE_STATS["quarantine"]
+    assert len(reports) == 1 and reports[0]["step"] == 1, reports
+    assert os.path.exists(os.path.join(d, "step_00000001",
+                                       "QUARANTINE.json"))
+    for a, b in zip(jax.tree_util.tree_leaves((p, opt)),
+                    jax.tree_util.tree_leaves((p2, opt2))):
+        x, y = np.asarray(a), np.asarray(b)
+        if x.dtype == jnp.bfloat16:
+            x, y = x.view(np.uint16), y.view(np.uint16)
+        np.testing.assert_array_equal(x, y)
+print("RESILIENCE_OK", [round(r, 3) for r in ratios])
+"""
+
+
 def _run_subprocess(script):
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"
@@ -373,6 +457,18 @@ def test_spmd_8dev_elastic_sharded_checkpoint():
     r = _run_subprocess(ELASTIC_CKPT_SCRIPT)
     assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
     assert "ELASTIC_OK" in r.stdout
+
+
+@pytest.mark.slow
+def test_spmd_8dev_straggler_mitigation_and_quarantine():
+    """Acceptance (ISSUE 7 tentpole): on 8 fake devices, an injected slow
+    host (real sleeps) is rebalanced by MitigationPolicy to within ~1.2x
+    of the fault-free step time, and a corrupted checkpoint shard
+    restores from the last good step with a quarantine report instead of
+    raising."""
+    r = _run_subprocess(RESILIENCE_SCRIPT)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "RESILIENCE_OK" in r.stdout
 
 
 def test_mesh_constructors():
