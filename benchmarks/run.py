@@ -10,6 +10,7 @@ seconds, GBps}).
   beyond   -> grad_compression    §Roofline-> roofline (from dry-run JSONs)
   beyond   -> checkpoint (sync/async/sharded write path per codec)
   beyond   -> serve_latency (compressed-KV decode per token)
+  beyond   -> serve_load (continuous vs static batching on the paged pool)
   beyond   -> reshard (prefill->decode handoff wire bytes per codec)
   beyond   -> fault_recovery (chaos-injected fault recovery wall time)
 
@@ -28,7 +29,7 @@ import traceback
 
 from . import (checkpoint, chunksize, codebook, fault_recovery,
                grad_compression, huffman_repr, quality, rate_distortion,
-               reshard, roofline, serve_latency, throughput)
+               reshard, roofline, serve_latency, serve_load, throughput)
 
 MODULES = [
     ("codebook", codebook),
@@ -40,6 +41,7 @@ MODULES = [
     ("grad_compression", grad_compression),
     ("checkpoint", checkpoint),
     ("serve_latency", serve_latency),
+    ("serve_load", serve_load),
     ("reshard", reshard),
     ("fault_recovery", fault_recovery),
     ("roofline", roofline),

@@ -6,18 +6,23 @@ Two measurement levels:
   * ``engine``  — a real jitted one-token decode step through the serve
     engine, uncompressed KV vs. each blockwise KV codec
     (`ServeConfig.kv_codec` registry ids), so the number includes the
-    in-attention dequant on the hot path.
+    in-attention dequant on the hot path.  First-token latency (the cold
+    call: trace + XLA compile + the step itself) and steady-state decode
+    are reported as SEPARATE numbers — folding the one-off compile into
+    a per-token mean made every engine row meaningless at small sizes.
   * ``dequant`` — the isolated blockwise dequantize of one layer's K/V
     buffers across scale-block sizes, which is the per-token marginal
     cost the cache codec adds.
 
 Writes ``BENCH_serve_latency.json`` records
-``{path, codec, block, us_per_token}``.  CPU numbers are relative
-signals between codec variants (DESIGN.md §9).
+``{path, codec, block, first_token_ms, us_per_token}`` (``us_per_token``
+is steady-state only; dequant rows have no first-token leg).  CPU
+numbers are relative signals between codec variants (DESIGN.md §9).
 """
 from __future__ import annotations
 
 import os
+import time
 
 import jax
 import jax.numpy as jnp
@@ -46,23 +51,37 @@ def _engine_records(small: bool, records: list) -> None:
     for codec in (None,) + BLOCK_CODECS:
         scfg = ServeConfig(s_max=s_max, compressed_kv=codec is not None,
                            kv_codec=codec or "int8-block")
+        # a fresh jit per codec variant: the first call below is a true
+        # cold start (trace + compile + execute) = the first-token number
         step = jax.jit(make_serve_step(cfg, scfg))
         last, caches, pl = prefill(params, cfg, prompt, scfg)
         tok = jnp.argmax(last, axis=-1).astype(jnp.int32)[:, None]
 
+        t0 = time.perf_counter()
+        logits, caches = jax.block_until_ready(
+            step(params, tok, caches, jnp.int32(pl)))
+        first = time.perf_counter() - t0
+        tok = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)[:, None]
+
         def decode_tokens(tok, caches):
             for i in range(n_new):
-                logits, caches = step(params, tok, caches, jnp.int32(pl + i))
+                logits, caches = step(params, tok, caches,
+                                      jnp.int32(pl + 1 + i))
                 tok = jnp.argmax(logits[:, 0, :], axis=-1
                                  ).astype(jnp.int32)[:, None]
             return tok
 
+        # steady state: timeit warms the loop once more, then medians
+        # compiled-only iterations — the compile never rides in this mean
         t = timeit(decode_tokens, tok, caches) / n_new
         name = codec or "none"
         records.append({"path": "engine", "codec": name,
                         "block": KVC.SEQ_BLOCK if codec else 0,
+                        "first_token_ms": round(first * 1e3, 2),
                         "us_per_token": round(t * 1e6, 2)})
-        emit(f"serve_decode_{name}", t, f"us_per_token={t * 1e6:.1f}")
+        emit(f"serve_decode_{name}", t,
+             f"first_token_ms={first * 1e3:.1f};"
+             f"steady_us_per_token={t * 1e6:.1f}")
 
 
 def _dequant_records(small: bool, records: list) -> None:

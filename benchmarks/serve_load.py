@@ -1,0 +1,116 @@
+"""Continuous-batching serve load test: many concurrent synthetic
+sessions through the paged compressed-KV pool scheduler, continuous vs
+static (wave) admission at the SAME pool budget.
+
+Sessions have mixed prompt/generation lengths and Poisson-style seeded
+arrivals (exponential inter-arrival gaps in decode-step units, from an
+explicitly seeded generator — reruns see the identical trace).  Request
+latency is measured arrival -> last token in decode-step units and
+converted to seconds with the run's measured mean step time, so the
+p50/p99 split reflects scheduling (queueing + waves) rather than
+compile noise.
+
+Writes ``BENCH_serve_load.json`` records
+``{mode, requests, tokens, tokens_per_s, p50_s, p99_s, first_token_s,
+mean_occupancy, peak_pages, preemptions, n_steps}``; CI asserts the
+records are non-empty with a finite p99.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.models import model as M
+from repro.serve import engine as E
+from repro.serve import scheduler as S
+from .common import emit, write_json
+
+JSON_NAME = "BENCH_serve_load.json"
+
+ARCH = "qwen2.5-3b"
+SEED = 0
+
+
+def _requests(n: int, max_prompt: int, max_new: int,
+              mean_gap: float, seed: int):
+    """Seeded synthetic session trace: mixed lengths, Poisson arrivals."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.floor(np.cumsum(rng.exponential(mean_gap, size=n))
+                        ).astype(int)
+    return [S.Request(
+        rid=i,
+        prompt=rng.integers(1, 200, size=int(rng.integers(4, max_prompt + 1))
+                            ).astype(np.int32),
+        max_new=int(rng.integers(2, max_new + 1)),
+        arrival=int(arrivals[i])) for i in range(n)]
+
+
+def _run_mode(params, cfg, scfg, schedcfg, reqs, mode: str):
+    runner = S.run_continuous if mode == "continuous" else S.run_static
+    # warmup: replay the full trace once so every prefill length and the
+    # (cfg, scfg, schedcfg) batched step are compiled before timing —
+    # the timed run below measures scheduling, not tracing
+    runner(params, cfg, scfg, schedcfg, reqs)
+    t0 = time.perf_counter()
+    fin, sched = runner(params, cfg, scfg, schedcfg, reqs)
+    wall = time.perf_counter() - t0
+    total = sum(len(f["tokens"]) for f in fin.values())
+    step_s = wall / max(1, sched.n_steps)
+    lat = sorted((f["t_finish"] - r.arrival) * step_s
+                 for f, r in ((fin[r.rid], r) for r in reqs))
+    first = sorted((f["t_submit"] - r.arrival + 1) * step_s
+                   for f, r in ((fin[r.rid], r) for r in reqs))
+    st = sched.pool.stats()
+    return {"mode": mode, "requests": len(reqs), "tokens": total,
+            "tokens_per_s": round(total / wall, 2),
+            "p50_s": round(float(np.percentile(lat, 50)), 4),
+            "p99_s": round(float(np.percentile(lat, 99)), 4),
+            "first_token_s": round(float(np.percentile(first, 50)), 4),
+            "mean_occupancy": round(float(np.mean(
+                sched.occupancy_samples)), 4) if sched.occupancy_samples
+            else 0.0,
+            "peak_pages": st["peak_used"],
+            "evicted_pages": st["evicted_pages"],
+            "restored_pages": st["restored_pages"],
+            "preemptions": sched.preemptions,
+            "n_steps": sched.n_steps}
+
+
+def main(small: bool = False, json_dir: str = ".") -> None:
+    cfg = configs.reduced(ARCH, n_periods=1)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    if small:
+        n, max_prompt, max_new, gap = 6, 12, 8, 1.0
+        s_max, max_batch, pool_pages = 256, 2, 16
+    else:
+        n, max_prompt, max_new, gap = 16, 48, 24, 2.0
+        s_max, max_batch, pool_pages = 512, 4, 32
+    scfg = E.ServeConfig(s_max=s_max, compressed_kv=True,
+                         compute_dtype=jnp.float32)
+    schedcfg = S.SchedulerConfig(max_batch=max_batch,
+                                 pool_pages=pool_pages,
+                                 evict_codec="int8-block")
+    reqs = _requests(n, max_prompt, max_new, gap, SEED)
+
+    records = []
+    for mode in ("continuous", "static"):
+        rec = _run_mode(params, cfg, scfg, schedcfg, reqs, mode)
+        records.append(rec)
+        emit(f"serve_load_{mode}", rec["n_steps"],
+             f"tokens_per_s={rec['tokens_per_s']};p99_s={rec['p99_s']};"
+             f"n_steps={rec['n_steps']}")
+    cont, stat = records
+    # the deterministic form of "continuous beats static": fewer decode
+    # steps for the same emitted tokens at the same pool budget
+    assert cont["tokens"] == stat["tokens"], records
+    assert cont["n_steps"] <= stat["n_steps"], records
+    write_json(os.path.join(json_dir, JSON_NAME), records)
+
+
+if __name__ == "__main__":
+    main()

@@ -19,6 +19,10 @@ import jax.numpy as jnp
 from repro import _compat
 
 SEQ_BLOCK = 128          # scale granularity along the sequence axis
+#: scale floor for all-zero blocks: matches `int8.block_quantize`'s
+#: clamp, so a zero-extension block assembled by hand (cache init, paged
+#: slot adoption) is bit-identical to one produced by quantizing zeros
+SCALE_FLOOR = 1e-30
 _QMAX = 127.0
 
 
@@ -61,7 +65,7 @@ def kv_update_block(qkv: QuantKV, new: jax.Array, pos, seq_axis: int) -> QuantKV
                                              keepdims=True)
     need = jnp.max(jnp.abs(new), axis=seq_axis,
                    keepdims=True).astype(jnp.float32) / _QMAX
-    new_scale = jnp.maximum(old_scale, jnp.maximum(need, 1e-30))
+    new_scale = jnp.maximum(old_scale, jnp.maximum(need, SCALE_FLOOR))
     # requantize the block's existing tokens under the widened scale so
     # their dequantized values are preserved (bound becomes new_scale/2)
     old_blk = jax.lax.dynamic_slice_in_dim(qkv.q, blk * SEQ_BLOCK, SEQ_BLOCK,
@@ -289,3 +293,55 @@ def kv_wire_restore(parts: Sequence, seq_axis: int,
 def kv_wire_nbytes(parts: Sequence) -> int:
     """Bytes the containers occupy on the wire (packed payload bytes)."""
     return sum(p.nbytes for p in parts)
+
+
+# ---------------------------------------------------------------------------
+# Page-granular layer: one *page* = one SEQ_BLOCK-aligned seq slab of a
+# cache tensor, kept in the in-memory QuantKV payload form.  The paged
+# serve pool (`repro.serve.pool`) slices sequences into pages, parks them
+# in a shared device pool and evicts cold ones to host through a wire
+# codec; everything here stays in payload space for the int8-block case,
+# so pool pages adopted back into a decode slot are bit-identical to the
+# whole-tensor quantize path (the PR-5 zero-requantize trick, one block
+# at a time).
+# ---------------------------------------------------------------------------
+
+def kv_page_count(length: int) -> int:
+    """Pages needed to back `length` written cache positions."""
+    return -(-int(length) // SEQ_BLOCK)
+
+
+def kv_page_slice(qkv: QuantKV, seq_axis: int, idx: int) -> QuantKV:
+    """Payload-space slice of page `idx`: q gets SEQ_BLOCK rows, scale
+    gets the one matching block row — no dequantize."""
+    q = _slice_axis(qkv.q, seq_axis, idx * SEQ_BLOCK, (idx + 1) * SEQ_BLOCK)
+    scale = _slice_axis(qkv.scale, seq_axis, idx, idx + 1)
+    return QuantKV(q, scale)
+
+
+def kv_page_concat(slabs: Sequence[QuantKV], seq_axis: int) -> QuantKV:
+    """Payload-space concat of page slabs along the seq axis (inverse of
+    `kv_page_slice` over consecutive pages)."""
+    q = jnp.concatenate([jnp.asarray(s.q) for s in slabs], axis=seq_axis)
+    scale = jnp.concatenate([jnp.asarray(s.scale) for s in slabs],
+                            axis=seq_axis)
+    return QuantKV(q, scale)
+
+
+def kv_page_encode(slab: QuantKV, seq_axis: int, *,
+                   codec: str = "int8-block",
+                   source_dtype=jnp.bfloat16,
+                   codec_cfg: Optional[dict] = None) -> Tuple:
+    """Page-granular wire encode (the pool's eviction leg): one page slab
+    becomes a 1-tuple of packed Containers.  "int8-block" never leaves
+    payload space (bit-exact restore); "cusz"/"lossless" dequantize the
+    slab and re-encode it whole (the restore side re-quantizes, stacking
+    the codec's bound on top of the page's scale/2)."""
+    return kv_wire_encode(slab, seq_axis, wire=codec, nslabs=1,
+                          source_dtype=source_dtype, wire_cfg=codec_cfg)
+
+
+def kv_page_adopt(parts: Sequence, seq_axis: int) -> QuantKV:
+    """Adopt packed int8-block page containers back as the in-memory
+    QuantKV slab — payload-space, bit-exact (`kv_wire_adopt` per page)."""
+    return kv_wire_adopt(parts, seq_axis)

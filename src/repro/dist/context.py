@@ -41,6 +41,7 @@ _weight_compress_stack: List[Optional[str]] = []   # armed codec names
 _a2a_compress_stack: List[Optional[str]] = []
 _restore_compress_stack: List[Optional[str]] = []
 _kv_reshard_stack: List[Optional[str]] = []
+_kv_evict_stack: List[Optional[str]] = []
 
 
 def _is_spec(x) -> bool:
@@ -264,6 +265,35 @@ def kv_reshard_codec() -> Optional[str]:
     if not _kv_reshard_stack:
         return None
     return _kv_reshard_stack[-1] or "lossless"
+
+
+def use_kv_evict_codec(active):
+    """Arm the paged-pool eviction codec: when the serve pool
+    (``repro.serve.pool.PagedKVPool``) pushes cold pages to host, they
+    cross as this codec's Containers.  `active`: bool (True =
+    "int8-block" payload pass-through, bit-exact restore; False/"none" =
+    an explicit disarm, which the pool resolves to "int8-block" — cold
+    pages always need *some* host form, and the lossless-payload one is
+    the conservative default) or a registry name — "int8-block",
+    "cusz" (recompressed, higher ratio, restore re-quantizes under the
+    codec's bound) or "lossless" (raw dequantized values).  Validated at
+    arm time like the kv-reshard/a2a/restore hooks."""
+    name = _codec_name(active)
+    if name is not None and name not in ("cusz", "lossless"):
+        from repro import codecs
+        codecs.get_block_codec(name, axis=0, block=8)
+    return _pushed(_kv_evict_stack, name)
+
+
+def kv_evict_codec() -> Optional[str]:
+    """Registry name of the armed pool-eviction codec.  None = nothing
+    armed (the pool falls back to its own default).  An explicit disarm
+    resolves to "int8-block": eviction always needs a host form, so
+    "off" means the bit-exact payload pack — never a silent lossy
+    fall-through."""
+    if not _kv_evict_stack:
+        return None
+    return _kv_evict_stack[-1] or "int8-block"
 
 
 def resolve_sharding(mesh, shape, *spec_elems) -> NamedSharding:

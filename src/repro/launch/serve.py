@@ -1,5 +1,6 @@
 """Serving launcher: batched prefill + decode loop, optionally split
-into disaggregated prefill/decode phases with the compressed KV handoff.
+into disaggregated prefill/decode phases with the compressed KV handoff,
+or run as a continuous-batching server over the paged compressed-KV pool.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --reduced \
         --batch 4 --prompt-len 32 --new-tokens 32 --compressed-kv
@@ -7,6 +8,11 @@ into disaggregated prefill/decode phases with the compressed KV handoff.
     # disaggregated: prefill -> Containers -> reshard -> decode
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --reduced \
         --compressed-kv --disaggregate --wire-codec int8-block
+
+    # continuous batching on the paged pool (implies --compressed-kv)
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --reduced \
+        --continuous --requests 8 --max-batch 4 --pool-pages 32 \
+        --evict-codec cusz
 """
 from __future__ import annotations
 
@@ -43,6 +49,19 @@ def main():
                     choices=["int8-block", "cusz", "lossless"],
                     help="prefill->decode handoff wire codec")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous-batching scheduler on the paged "
+                         "compressed-KV pool (implies --compressed-kv)")
+    ap.add_argument("--requests", type=int, default=8,
+                    help="[continuous] synthetic request count")
+    ap.add_argument("--max-batch", type=int, default=4,
+                    help="[continuous] decode slots")
+    ap.add_argument("--pool-pages", type=int, default=32,
+                    help="[continuous] device page budget of the pool")
+    ap.add_argument("--evict-codec", default=None,
+                    choices=["int8-block", "cusz", "lossless"],
+                    help="[continuous] pool eviction codec (default: the "
+                         "armed dist-context hook, else cusz)")
     launch_env.add_arguments(ap)
     args = ap.parse_args()
 
@@ -53,9 +72,42 @@ def main():
     prompt = jnp.asarray(rng.integers(0, cfg.vocab,
                                       (args.batch, args.prompt_len))
                          .astype(np.int32))
-    scfg = ServeConfig(s_max=args.s_max, compressed_kv=args.compressed_kv,
-                       kv_codec=args.kv_codec,
-                       temperature=args.temperature)
+    scfg = ServeConfig(
+        s_max=args.s_max,
+        compressed_kv=args.compressed_kv or args.continuous,
+        kv_codec=args.kv_codec, temperature=args.temperature)
+
+    if args.continuous:
+        from repro.serve import scheduler as sched_mod
+        reqs = [sched_mod.Request(
+            rid=i,
+            prompt=rng.integers(1, cfg.vocab,
+                                size=int(rng.integers(
+                                    4, args.prompt_len + 1))
+                                ).astype(np.int32),
+            max_new=int(rng.integers(2, args.new_tokens + 1)),
+            arrival=int(rng.integers(0, max(1, args.requests // 2))))
+            for i in range(args.requests)]
+        schedcfg = sched_mod.SchedulerConfig(
+            max_batch=args.max_batch, pool_pages=args.pool_pages,
+            evict_codec=args.evict_codec)
+        t0 = time.perf_counter()
+        fin, sched = sched_mod.run_continuous(params, cfg, scfg,
+                                              schedcfg, reqs)
+        dt = time.perf_counter() - t0
+        total = sum(len(f["tokens"]) for f in fin.values())
+        st = sched.pool.stats()
+        print(f"arch={cfg.name} continuous requests={len(fin)} "
+              f"max_batch={args.max_batch} pool_pages={args.pool_pages}")
+        print(f"decode_steps={sched.n_steps} preemptions="
+              f"{sched.preemptions} evicted={st['evicted_pages']} "
+              f"restored={st['restored_pages']} "
+              f"peak_pages={st['peak_used']} "
+              f"evict_codec={st['evict_codec']}")
+        print(f"generated {total} tokens in {dt:.2f}s "
+              f"({total / dt:.1f} tok/s incl. compile)")
+        return
+
     t0 = time.perf_counter()
     if args.disaggregate:
         last, caches, plen = prefill(params, cfg, prompt, scfg)

@@ -184,7 +184,7 @@ def init_caches(cfg: ModelConfig, batch: int, s_max: int,
                     entries.append(KVC.QuantKV(
                         jnp.zeros((nP, batch, s_max, R), jnp.int8),
                         jnp.full((nP, batch, s_max // KVC.SEQ_BLOCK, R),
-                                 1e-30, jnp.float32)))
+                                 KVC.SCALE_FLOOR, jnp.float32)))
                 else:
                     entries.append(jnp.zeros((nP, batch, s_max, R), dtype))
             elif compressed_kv:
@@ -192,7 +192,8 @@ def init_caches(cfg: ModelConfig, batch: int, s_max: int,
                     jnp.zeros((nP, batch, s_max, cfg.n_kv_heads, cfg.head_dim),
                               jnp.int8),
                     jnp.full((nP, batch, s_max // KVC.SEQ_BLOCK,
-                              cfg.n_kv_heads, cfg.head_dim), 1e-30, jnp.float32))
+                              cfg.n_kv_heads, cfg.head_dim),
+                             KVC.SCALE_FLOOR, jnp.float32))
                 entries.append((kq, kq))
             else:
                 z = jnp.zeros((nP, batch, s_max, cfg.n_kv_heads, cfg.head_dim),

@@ -1,1 +1,3 @@
 from . import engine  # noqa: F401
+from . import pool  # noqa: F401
+from . import scheduler  # noqa: F401

@@ -123,11 +123,17 @@ def get_serve_step(cfg: ModelConfig, scfg: ServeConfig):
     return jax.jit(make_serve_step(cfg, scfg))
 
 
-def _pick(logits, k, scfg: ServeConfig):
+def pick_token(logits, k, scfg: ServeConfig):
+    """Greedy / temperature sampling from [B, V] logits -> [B] int32.
+    Shared by `decode_tokens` and the continuous-batching scheduler's
+    per-slot step."""
     if scfg.temperature <= 0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     return jax.random.categorical(k, logits / scfg.temperature
                                   ).astype(jnp.int32)
+
+
+_pick = pick_token
 
 
 def decode_tokens(params, cfg: ModelConfig, scfg: ServeConfig,
@@ -196,8 +202,14 @@ def encode_handoff(caches: M.DecodeCaches, cfg: ModelConfig,
     with the wire accounting."""
     wire = wire or dist_ctx.kv_reshard_codec() or "int8-block"
     item = np.dtype(jnp.bfloat16).itemsize
-    stats = {"wire": wire, "tensors": 0, "containers": 0,
-             "wire_bytes": 0, "raw_bf16_bytes": 0, "lossless_fallback": 0}
+    # reset at call START, not return: back-to-back sessions must never
+    # read the previous call's wire accounting, and a failed handoff
+    # leaves partial (not stale-successful) stats behind
+    LAST_HANDOFF_STATS.clear()
+    LAST_HANDOFF_STATS.update(
+        {"wire": wire, "tensors": 0, "containers": 0,
+         "wire_bytes": 0, "raw_bf16_bytes": 0, "lossless_fallback": 0})
+    stats = LAST_HANDOFF_STATS
 
     def account(parts, raw_bytes):
         stats["tensors"] += 1
@@ -238,8 +250,6 @@ def encode_handoff(caches: M.DecodeCaches, cfg: ModelConfig,
         else:
             kinds.append("state")
             entries.append(tuple(ship_state(x) for x in c))
-    LAST_HANDOFF_STATS.clear()
-    LAST_HANDOFF_STATS.update(stats)
     return KVHandoff(tuple(kinds), tuple(entries), int(plen), wire)
 
 
@@ -275,7 +285,11 @@ def reshard_caches(handoff: KVHandoff, cfg: ModelConfig, scfg: ServeConfig,
     compressed target, re-quantizes) jitted with the decode mesh's
     shardings as out_shardings.  Updates ``LAST_RESHARD_STATS``."""
     mesh = mesh if mesh is not None else dist_ctx.current_mesh()
-    stats = {"tensors": 0, "adopted_quantkv": 0, "decoded": 0}
+    # reset at call start (same contract as LAST_HANDOFF_STATS)
+    LAST_RESHARD_STATS.clear()
+    LAST_RESHARD_STATS.update({"tensors": 0, "adopted_quantkv": 0,
+                               "decoded": 0})
+    stats = LAST_RESHARD_STATS
 
     def put(x, *spec):
         if mesh is None:
@@ -356,6 +370,4 @@ def reshard_caches(handoff: KVHandoff, cfg: ModelConfig, scfg: ServeConfig,
                 stats["decoded"] += 1
                 vals.append(put(codecs.decode(parts[0]), None, "data"))
             entries.append(ssm_mod.MambaState(*vals))
-    LAST_RESHARD_STATS.clear()
-    LAST_RESHARD_STATS.update(stats)
     return M.DecodeCaches(tuple(entries))
