@@ -24,20 +24,23 @@ def main() -> None:
     cw, bw = hf.encode(codes, cb)
     n = cw.shape[0]
     nbytes = f.size * 4
+    ml = hf.bucket_max_len(max(1, int(cb.max_len)))
+    table = hf.decode_table(cb.lengths, ml)
     for lg in range(6, 17):
         chunk = 1 << lg
-        defl = jax.jit(lambda c, b: hf.deflate(c, b, chunk))
+        sub = C.CompressorConfig().sub_size if chunk >= C.CompressorConfig().sub_size else chunk
+        defl = jax.jit(lambda c, b: hf.deflate(c, b, chunk, sub))
         t_d = timeit(defl, cw, bw)
-        words, bits = defl(cw, bw)
+        words, bits, gap_bits, _ = defl(cw, bw)
         nc = words.shape[0]
         n_valid = jnp.asarray(np.minimum(
             chunk, np.maximum(n - np.arange(nc) * chunk, 0)).astype(np.int32))
-        infl = jax.jit(lambda w, v: hf.inflate_lut(
-            w, v, cb, lut_bits=min(hf.LUT_BITS, max(1, int(cb.max_len)))))
-        t_i = timeit(infl, words, n_valid)
+        infl = jax.jit(lambda w, v, g: hf.inflate_gap(w, v, g, table, sub, ml))
+        t_i = timeit(infl, words, n_valid, gap_bits)
         emit(f"deflate_c{chunk}", t_d,
              f"GBps={nbytes / t_d / 1e9:.3f};threads={nc:.0f}")
-        emit(f"inflate_c{chunk}", t_i, f"GBps={nbytes / t_i / 1e9:.3f}")
+        emit(f"inflate_c{chunk}", t_i,
+             f"GBps={nbytes / t_i / 1e9:.3f};subchunks={nc * chunk // sub:.0f}")
 
 
 if __name__ == "__main__":

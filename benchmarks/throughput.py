@@ -104,15 +104,15 @@ def _bench_field(name: str, arr: np.ndarray, cfg: C.CompressorConfig,
 
     # blob values are impl-independent (parity is bit-exact); build once
     blob, _ = C.compress(f, dataclasses.replace(cfg, kernel_impl="jax"))
-    ml = max(1, int(blob.max_len))
+    ml = hf.bucket_max_len(max(1, int(blob.max_len)))
+    table = hf.decode_table(blob.lengths, ml)
 
-    # inflate has no Pallas form (RAW-bound; dispatch resolves any pallas
-    # request to the reference), so it gets ONE row under its real impl
-    # instead of identical re-timings mislabeled per axis value
+    # legacy sequential decode (the format-v1 path): one jax-only row —
+    # the cliff the gap-array decode exists to kill
     t = timeit(lambda w, bu, nv: inflate_ops.inflate(
-        w, bu, nv, cb, ml, impl="jax"),
+        w, bu, nv, table, ml, impl="jax"),
         blob.words, blob.bits_used, blob.n_valid)
-    rec("inflate", "jax", t, nbytes / t / 1e9)
+    rec("inflate_seq", "jax", t, nbytes / t / 1e9)
 
     nb = tuple(p // b for p, b in
                zip(dq.padded_shape(f.shape, block), block))
@@ -131,8 +131,16 @@ def _bench_field(name: str, arr: np.ndarray, cfg: C.CompressorConfig,
         rec("encode", impl, t, nbytes / t / 1e9)
 
         t = timeit(lambda c, b: deflate_ops.deflate(
-            c, b, cfg.chunk_size, impl=impl), cw, bw)
+            c, b, cfg.chunk_size, cfg.sub_size, impl=impl)[0], cw, bw)
         rec("deflate", impl, t, nbytes / t / 1e9)
+
+        # gap-array two-phase inflate: the full impl axis (the Pallas
+        # kernel exists now — this is the row the old jax-only note said
+        # would never appear)
+        t = timeit(lambda w, bu, nv, g: inflate_ops.inflate(
+            w, bu, nv, table, ml, gaps=g, impl=impl),
+            blob.words, blob.bits_used, blob.n_valid, blob.gap_bits)
+        rec("inflate", impl, t, nbytes / t / 1e9)
 
         t = timeit(lambda d: lorenzo_ops.reverse_blocks(d, eb, impl=impl),
                    dblk)
@@ -144,7 +152,7 @@ def _bench_field(name: str, arr: np.ndarray, cfg: C.CompressorConfig,
         rec("compress_total", impl, t, nbytes / t / 1e9)
 
         dec = jax.jit(lambda b: C._decompress_impl(
-            b, icfg, eb, tuple(f.shape), ml, pp))
+            b, table, icfg, eb, tuple(f.shape), ml, pp))
         t = timeit(dec, blob)
         rec("decompress_total", impl, t, nbytes / t / 1e9)
 

@@ -31,7 +31,10 @@ from .container import Container, stamp_checksum
 class CuszCodec(Codec):
     cfg: CZ.CompressorConfig = CZ.CompressorConfig()
     name = "cusz"
-    version = 1
+    # v2: payload carries the per-subchunk gap arrays (gap_bits/gap_syms)
+    # + sub_size in the header, enabling the parallel two-phase inflate;
+    # gap-less v1 containers still decode via the sequential path
+    version = 2
     # Lorenzo prediction crosses slice boundaries: encoding slices
     # independently changes the decode, so sharded saves keep each
     # leaf whole on one owner shard.
@@ -54,16 +57,15 @@ class CuszCodec(Codec):
         blob, eb = CZ.compress(x32, c)
         header = self._header(
             x, eb=float(eb), nbins=int(c.nbins), chunk_size=int(c.chunk_size),
-            block=tuple(c.block_for(x32.ndim)),
+            sub_size=int(c.sub_size), block=tuple(c.block_for(x32.ndim)),
             outlier_frac=float(c.outlier_frac))
-        return Container(header, dict(zip(CZ.CompressedBlob._fields, blob)))
+        return Container(header, _blob_payload(blob))
 
     def decode(self, c: Container, *, like=None) -> jax.Array:
         c = self.unpack(c)
         h = c.header
         cfg = self._decode_cfg(h)
-        blob = CZ.CompressedBlob(**{f: jnp.asarray(c.payload[f])
-                                    for f in CZ.CompressedBlob._fields})
+        blob = _payload_blob(c.payload, asarray=True)
         y = CZ.decompress(blob, cfg, float(h.param("eb")), h.shape)
         return self._finish(y, h, like)
 
@@ -71,8 +73,7 @@ class CuszCodec(Codec):
     def pack(self, c: Container) -> Container:
         if c.header.param("packed"):
             return c
-        blob = CZ.CompressedBlob(**{f: c.payload[f]
-                                    for f in CZ.CompressedBlob._fields})
+        blob = _payload_blob(c.payload)
         return stamp_checksum(Container(c.header.with_params(packed=True),
                                         CZ.pack_blob(blob)))
 
@@ -82,7 +83,7 @@ class CuszCodec(Codec):
         blob = CZ.unpack_blob(dict(c.payload))
         return Container(
             c.header.with_params(packed=False).without_params("checksum"),
-            dict(zip(CZ.CompressedBlob._fields, blob)))
+            _blob_payload(blob))
 
     def valid(self, c: Container) -> bool:
         """False when the sparse outlier store overflowed its capacity
@@ -99,9 +100,27 @@ class CuszCodec(Codec):
             eb=float(h.param("eb")), eb_mode="abs",
             nbins=int(h.param("nbins")),
             chunk_size=int(h.param("chunk_size")),
+            # v1 headers predate the gap arrays; the default is inert
+            # there (a gap-less blob decodes sequentially regardless)
+            sub_size=int(h.param("sub_size", 128)),
             block=tuple(h.param("block")),
             outlier_frac=float(h.param("outlier_frac")),
             kernel_impl=self.cfg.kernel_impl)
+
+
+def _blob_payload(blob: CZ.CompressedBlob) -> dict:
+    """Blob -> payload dict; None fields (gap-less v1 blobs) are omitted
+    so the payload stays an arrays-only mapping."""
+    return {f: v for f, v in zip(CZ.CompressedBlob._fields, blob)
+            if v is not None}
+
+
+def _payload_blob(payload, asarray: bool = False) -> CZ.CompressedBlob:
+    """Payload dict -> blob; gap fields absent on v1 payloads stay None."""
+    conv = jnp.asarray if asarray else (lambda v: v)
+    return CZ.CompressedBlob(**{
+        f: conv(payload[f]) if f in payload else None
+        for f in CZ.CompressedBlob._fields})
 
 
 register("cusz", CuszCodec.make)

@@ -20,7 +20,8 @@ policy); the blob is a pytree of device arrays so it can live on-device
 
 Compressed-size accounting matches the paper's: Huffman bitstream (word
 aligned per chunk) + sparse outliers + codebook (bitlengths suffice to
-rebuild the canonical book) + O(1) header.
+rebuild the canonical book) + the per-subchunk gap arrays that make the
+decode parallel (Rivera et al., arXiv 2201.09118) + O(1) header.
 """
 from __future__ import annotations
 
@@ -49,6 +50,8 @@ class CompressorConfig:
     eb_mode: str = "abs"             # "abs" | "valrel" (relative to range)
     nbins: int = 1024                # quantization bins (paper default)
     chunk_size: int = 4096           # Huffman deflate chunk (symbols)
+    sub_size: int = 128              # gap-array subchunk (symbols); the
+    #   parallel decode unit — must divide chunk_size
     block: Optional[Tuple[int, ...]] = None   # Lorenzo block; None = paper default
     outlier_frac: float = 0.10       # sparse outlier capacity fraction
     use_tpu_blocks: bool = False     # lane-aligned blocks (beyond-paper)
@@ -75,6 +78,11 @@ class CompressedBlob(NamedTuple):
     out_val: jax.Array       # [cap] int32 outlier deltas
     n_outliers: jax.Array    # scalar int32
     max_len: jax.Array       # scalar int32 practical max codeword length
+    # gap arrays (None on format-v1 blobs, which decode sequentially):
+    gap_bits: Optional[jax.Array] = None   # [nc, n_sub] int32 bit offset at
+    #   every sub_size-symbol boundary (phase-1 of the two-phase decode)
+    gap_syms: Optional[jax.Array] = None   # [nc, n_sub] int32 valid symbols
+    #   before each boundary
 
 
 @jax.jit
@@ -132,15 +140,15 @@ def _compress_impl(data: jax.Array, cfg: CompressorConfig, eb: float,
     lengths = hf.codeword_lengths(hist)
     cb = hf.canonical_codebook(lengths)
     cw, bw = encode_ops.encode(codes, cb, **pp.encode.as_kwargs())
-    words, bits = deflate_ops.deflate(cw, bw, cfg.chunk_size,
-                                      **pp.deflate.as_kwargs())
+    words, bits, gap_bits, gap_syms = deflate_ops.deflate(
+        cw, bw, cfg.chunk_size, cfg.sub_size, **pp.deflate.as_kwargs())
     nc = words.shape[0]
     n_sym = codes.size
     n_valid = jnp.minimum(
         jnp.full((nc,), cfg.chunk_size, jnp.int32),
         jnp.maximum(n_sym - jnp.arange(nc, dtype=jnp.int32) * cfg.chunk_size, 0))
     return CompressedBlob(words, bits, n_valid, lengths, oidx, oval,
-                          n_out, cb.max_len)
+                          n_out, cb.max_len, gap_bits, gap_syms)
 
 
 def compress(data: jax.Array, cfg: CompressorConfig) -> Tuple[CompressedBlob, float]:
@@ -152,13 +160,13 @@ def compress(data: jax.Array, cfg: CompressorConfig) -> Tuple[CompressedBlob, fl
 
 @partial(jax.jit, static_argnames=("cfg", "eb", "shape", "max_len_static",
                                    "pp"))
-def _decompress_impl(blob: CompressedBlob, cfg: CompressorConfig, eb: float,
+def _decompress_impl(blob: CompressedBlob, table: hf.DecodeTable,
+                     cfg: CompressorConfig, eb: float,
                      shape: Tuple[int, ...], max_len_static: int,
                      pp: dispatch.PipelinePolicy) -> jax.Array:
     ndim, block, pshape, n, cap = _shape_meta(shape, cfg)
-    cb = hf.canonical_codebook(blob.lengths)
-    codes = inflate_ops.inflate(blob.words, blob.bits_used, blob.n_valid, cb,
-                                max_len_static,
+    codes = inflate_ops.inflate(blob.words, blob.bits_used, blob.n_valid,
+                                table, max_len_static, gaps=blob.gap_bits,
                                 **pp.inflate.as_kwargs()).reshape(-1)[:n]
     delta = dq.codes_to_delta(codes, cfg.nbins)
     delta = dq.scatter_outliers(delta, blob.out_idx, blob.out_val)
@@ -174,8 +182,14 @@ def decompress(blob: CompressedBlob, cfg: CompressorConfig, eb: float,
     # repro-lint: allow[host-sync] max_len picks the LUT-vs-bitscan decode
     # variant, a static jit arg; one scalar readback per decompress call
     max_len = int(jax.device_get(blob.max_len))
+    # bucket the static max length (8/12/16/32) so decode compiles once
+    # per bucket, not once per field's exact max codeword length
+    ml_b = hf.bucket_max_len(max(1, max_len))
+    # decode tables built OUTSIDE the jitted decode, cached per codebook:
+    # the LUT scatter+cummax no longer re-runs on every restore
+    table = hf.decode_table(blob.lengths, ml_b)
     pp = dispatch.pipeline_policy(cfg.kernel_impl)
-    return _decompress_impl(blob, cfg, eb, shape, max(1, max_len), pp)
+    return _decompress_impl(blob, table, cfg, eb, shape, ml_b, pp)
 
 
 # ---------------------------------------------------------------------------
@@ -193,7 +207,10 @@ def compressed_bytes(blob: CompressedBlob, nbins: int) -> int:
 
     outliers = n_out * 8                       # (idx, delta) int32 pairs
     book = nbins                               # 1 B bitlength per symbol
-    return stream + outliers + book + HEADER_BYTES
+    gaps = 0
+    if blob.gap_bits is not None:              # 4 B bit + 2 B symbol offset
+        gaps = blob.gap_bits.size * 4 + blob.gap_syms.size * 2
+    return stream + outliers + book + gaps + HEADER_BYTES
 
 
 def compression_ratio(data: jax.Array, blob: CompressedBlob, nbins: int) -> float:
@@ -232,7 +249,7 @@ def pack_blob(blob: CompressedBlob) -> dict:
     chunk_ids, cols = _packed_coords(bits)
     packed = words[chunk_ids, cols]                  # one fancy-index gather
     n_out = int(b.n_outliers)
-    return {
+    d = {
         "words_packed": packed.astype(np.uint32),
         "bits_used": np.asarray(b.bits_used, np.int32),
         "n_valid": np.asarray(b.n_valid, np.int32),
@@ -243,6 +260,13 @@ def pack_blob(blob: CompressedBlob) -> dict:
         "chunk_words": np.int32(words.shape[1]),
         "out_capacity": np.int32(b.out_idx.shape[0]),
     }
+    if b.gap_bits is not None:
+        d["gap_bits"] = np.asarray(b.gap_bits, np.int32)
+        # symbol offsets are < chunk_size; u16 when that fits (default
+        # chunks easily do), else full i32
+        sdt = np.uint16 if words.shape[1] <= (1 << 16) else np.int32
+        d["gap_syms"] = np.asarray(b.gap_syms).astype(sdt)
+    return d
 
 
 def packed_nbytes(d: dict) -> int:
@@ -262,9 +286,13 @@ def unpack_blob(d: dict) -> CompressedBlob:
     n_out = len(d["out_idx"])
     oi[:n_out] = d["out_idx"]
     ov[:n_out] = d["out_val"]
+    gb = d.get("gap_bits")           # absent on format-v1 payloads
+    gs = d.get("gap_syms")
     return CompressedBlob(
         jnp.asarray(words), jnp.asarray(d["bits_used"]),
         jnp.asarray(d["n_valid"]),
         jnp.asarray(np.asarray(d["lengths"], np.int32)),
         jnp.asarray(oi), jnp.asarray(ov),
-        jnp.asarray(np.int32(n_out)), jnp.asarray(d["max_len"]))
+        jnp.asarray(np.int32(n_out)), jnp.asarray(d["max_len"]),
+        None if gb is None else jnp.asarray(np.asarray(gb, np.int32)),
+        None if gs is None else jnp.asarray(np.asarray(gs, np.int32)))

@@ -17,10 +17,20 @@ TPU adaptations (DESIGN.md §2):
   * deflate: exclusive prefix-sum of bitwidths gives each codeword its bit
     offset; every codeword splits into ≤2 32-bit word fragments combined by
     scatter-add (add ≡ OR on disjoint bits).  Chunked exactly like the
-    paper so that inflate retains coarse-grained chunk parallelism.
-  * inflate: per-chunk sequential decode (the paper is explicit this stage
-    is RAW-bound), vmapped over chunks; the O(symbols) LUT decoder is the
-    default whenever max codeword length ≤ LUT_BITS, else an O(bits) scan.
+    paper so that inflate retains coarse-grained chunk parallelism.  The
+    same prefix sum is sampled every `sub_size` symbols into a per-chunk
+    GAP ARRAY (Rivera et al., arXiv 2201.09118): the bit offset and the
+    valid-symbol offset at each subchunk boundary.
+  * inflate: gap-array two-phase decode.  Phase 1 is the gap array emitted
+    by deflate; phase 2 (`inflate_gap`) decodes every subchunk
+    independently from its recorded bit offset — the RAW-bound sequential
+    walk shrinks from `chunk_size` symbols to `sub_size` symbols, with
+    nc·(chunk/sub) subchunks running in lockstep.  Decode-side tables
+    (`DecodeTable`: the LUT when max codeword length ≤ LUT_BITS, else the
+    canonical length-interval bounds) are built ONCE per codebook via the
+    identity-keyed `decode_table` cache, not re-executed on-device per
+    call.  The legacy per-chunk sequential decoders (`inflate_lut` /
+    `inflate_bitscan`) remain for gap-less (format v1) containers.
 
 This module holds the reference algorithms; the pipeline's hot stages
 (histogram / encode / deflate / inflate) are *dispatched* through
@@ -30,8 +40,9 @@ kernels per backend (see kernels/dispatch.py).
 from __future__ import annotations
 
 import heapq
+from collections import OrderedDict
 from functools import partial
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -39,6 +50,27 @@ import numpy as np
 
 MAXLEN = 32          # hard cap on codeword bitlength (u32 stream words)
 LUT_BITS = 16        # use table decoder when max bitlength <= this
+SUBCHUNK = 128       # default gap-array subchunk (symbols per decode unit):
+#   6 B of gap per boundary => ~0.05 B/symbol storage overhead, while the
+#   sequential decode walk drops from chunk_size to SUBCHUNK steps
+# static LUT-size buckets: every max codeword length maps to the next
+# bucket so decode compiles one executable per bucket, not one per field
+LUT_BUCKETS = (8, 12, 16)
+
+
+def bucket_max_len(max_len: int) -> int:
+    """Round a practical max codeword length up to the static bucket set.
+
+    The decoder specializes on `max_len_static` (it sizes the LUT), so
+    passing the raw per-field value compiles a distinct executable for
+    every distinct max length.  Bucketing to {8, 12, 16} keeps the
+    adaptive-repr win (small books get small LUTs) while capping the
+    number of compiled decode variants; anything above LUT_BITS falls
+    into the single bit-interval (bitscan) regime at MAXLEN."""
+    for b in LUT_BUCKETS:
+        if max_len <= b:
+            return b
+    return MAXLEN
 
 
 def histogram(codes: jax.Array, nbins: int) -> jax.Array:
@@ -205,15 +237,34 @@ def encode(codes: jax.Array, cb: Codebook) -> Tuple[jax.Array, jax.Array]:
     return cb.codes[flat], cb.lengths[flat]
 
 
-def deflate(cw: jax.Array, bw: jax.Array, chunk_size: int
-            ) -> Tuple[jax.Array, jax.Array]:
+def norm_sub_size(chunk_size: int, sub_size: int) -> int:
+    """Clamp the gap-array subchunk to the chunk and check divisibility."""
+    sub = min(int(sub_size), int(chunk_size))
+    if chunk_size % sub:
+        raise ValueError(f"sub_size {sub} must divide chunk_size "
+                         f"{chunk_size}")
+    return sub
+
+
+def deflate(cw: jax.Array, bw: jax.Array, chunk_size: int,
+            sub_size: int = SUBCHUNK
+            ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Concatenate variable-length codes into dense per-chunk bitstreams.
 
     Prefix-sum formulation: exclusive cumsum of bitwidths = bit offset of
     every codeword; each codeword contributes <=2 disjoint u32 fragments,
-    combined with scatter-add.  Returns (words[nc, chunk_size] uint32,
-    bits_used[nc] int32).  MSB-first within each word.
+    combined with scatter-add.  MSB-first within each word.
+
+    The exclusive prefix sum is additionally sampled every `sub_size`
+    symbols into the GAP ARRAY (Rivera et al., arXiv 2201.09118) that
+    makes inflate parallel over subchunks: `gap_bits[c, s]` is the bit
+    offset of subchunk s inside chunk c, `gap_syms[c, s]` the count of
+    valid (non-pad) symbols before it.
+
+    Returns (words[nc, chunk_size] uint32, bits_used[nc] int32,
+    gap_bits[nc, chunk_size//sub_size] int32, gap_syms[...] int32).
     """
+    sub = norm_sub_size(chunk_size, sub_size)
     n = cw.shape[0]
     nc = -(-n // chunk_size)
     pad = nc * chunk_size - n
@@ -222,6 +273,9 @@ def deflate(cw: jax.Array, bw: jax.Array, chunk_size: int
 
     offs = jnp.cumsum(bw, axis=1) - bw                    # exclusive
     bits_used = (offs[:, -1] + bw[:, -1]).astype(jnp.int32)
+    gap_bits = offs[:, ::sub].astype(jnp.int32)           # [nc, n_sub]
+    valid_cnt = jnp.cumsum((bw > 0).astype(jnp.int32), axis=1) - (bw > 0)
+    gap_syms = valid_cnt[:, ::sub].astype(jnp.int32)
 
     w = (offs >> 5).astype(jnp.int32)
     b = (offs & 31).astype(jnp.int32)
@@ -241,7 +295,7 @@ def deflate(cw: jax.Array, bw: jax.Array, chunk_size: int
     ci = jnp.broadcast_to(jnp.arange(nc)[:, None], w.shape)
     out = out.at[ci, w].add(hi, mode="drop")
     out = out.at[ci, w + 1].add(lo, mode="drop")
-    return out, bits_used
+    return out, bits_used, gap_bits, gap_syms
 
 
 # ---------------------------------------------------------------------------
@@ -270,13 +324,16 @@ def _build_lut(cb: Codebook, lut_bits: int) -> Tuple[jax.Array, jax.Array]:
 
 
 def inflate_lut(words: jax.Array, n_valid: jax.Array, cb: Codebook,
-                lut_bits: int = LUT_BITS) -> jax.Array:
+                lut_bits: int = LUT_BITS,
+                lut: Optional[Tuple[jax.Array, jax.Array]] = None
+                ) -> jax.Array:
     """O(symbols) per-chunk decode via the LUT; vmapped over chunks.
 
     words: [nc, W] uint32; n_valid: [nc] symbols per chunk.
     Returns codes [nc, chunk_symbols] (chunk_symbols == W: one u32 per
-    symbol capacity, mirroring deflate)."""
-    lut_sym, lut_len = _build_lut(cb, lut_bits)
+    symbol capacity, mirroring deflate).  Pass `lut` (from a cached
+    `DecodeTable`) to skip the in-trace table build."""
+    lut_sym, lut_len = lut if lut is not None else _build_lut(cb, lut_bits)
     nc, W = words.shape
     n_sym = W
 
@@ -351,8 +408,142 @@ def _len_count(cb: Codebook, l: jax.Array) -> jax.Array:
 def inflate(words: jax.Array, bits_used: jax.Array, n_valid: jax.Array,
             cb: Codebook, max_len_static: int) -> jax.Array:
     """Dispatch LUT vs bit-scan on the *static* bound for max codeword
-    length (callers pass the practical bound; paper's adaptive-repr idea)."""
+    length (callers pass the practical bound; paper's adaptive-repr idea).
+    This is the legacy per-chunk SEQUENTIAL decode, kept for gap-less
+    (format v1) streams; gap-array streams use `inflate_gap`."""
     if max_len_static <= LUT_BITS:
         return inflate_lut(words, n_valid, cb,
                            lut_bits=max(1, max_len_static))
     return inflate_bitscan(words, bits_used, n_valid, cb)
+
+
+# ---------------------------------------------------------------------------
+# Gap-array two-phase decode (Rivera et al., arXiv 2201.09118)
+# ---------------------------------------------------------------------------
+
+class DecodeTable(NamedTuple):
+    """Everything the decode side derives from a codebook, built once per
+    codebook (see `decode_table`) instead of inside every decode trace.
+
+    `lut_sym`/`lut_len` are the dense LUT (LUT regime, max_len <= LUT_BITS;
+    [1]-sized dummies otherwise).  `thresh`/`lmask` are the canonical
+    length-interval bounds used by the LUT-free decoders: left-aligned
+    canonical code intervals tile [0, 2^32) contiguously in length order
+    (base_al[l+1] == end_al[l]), so for a 32-bit left-aligned peek of a
+    valid stream the codeword length is
+
+        len = 1 + sum_l lmask[l] * [peek >= thresh[l]]
+
+    with thresh[l] = (first_code[l] + count[l]) << (32 - l) and lmask
+    enabling 1 <= l < max_len (for those l the end never reaches 2^32, so
+    the u32 compare is exact)."""
+    cb: Codebook
+    lut_sym: jax.Array      # [1 << lut_bits] int32 (or [1] dummy)
+    lut_len: jax.Array      # [1 << lut_bits] int32 (or [1] dummy)
+    thresh: jax.Array       # [MAXLEN + 1] uint32 end-of-interval bounds
+    lmask: jax.Array        # [MAXLEN + 1] int32 validity of each bound
+
+
+def _length_bounds(cb: Codebook) -> Tuple[jax.Array, jax.Array]:
+    cnt = jnp.bincount(jnp.clip(cb.lengths, 0, MAXLEN),
+                       length=MAXLEN + 1).at[0].set(0)
+    ell = jnp.arange(MAXLEN + 1, dtype=jnp.int32)
+    span = cb.first_code + cnt.astype(jnp.uint32)     # first_code[l]+count[l]
+    thresh = span << jnp.clip(32 - ell, 0, 31).astype(jnp.uint32)
+    lmask = ((ell >= 1) & (ell < cb.max_len)).astype(jnp.int32)
+    return thresh, lmask
+
+
+@partial(jax.jit, static_argnames=("max_len_static",))
+def build_decode_table(lengths: jax.Array, max_len_static: int) -> DecodeTable:
+    """Codebook + decode tables from stored bitlengths (one jit per
+    (nbins, bucketed max_len) — NOT per field)."""
+    cb = canonical_codebook(lengths)
+    thresh, lmask = _length_bounds(cb)
+    if max_len_static <= LUT_BITS:
+        lut_sym, lut_len = _build_lut(cb, max(1, max_len_static))
+    else:
+        lut_sym = jnp.zeros((1,), jnp.int32)
+        lut_len = jnp.zeros((1,), jnp.int32)
+    return DecodeTable(cb, lut_sym, lut_len, thresh, lmask)
+
+
+# identity-keyed LRU: repeated decodes of the same stored codebook (serve
+# eviction-restore, checkpoint restore retries) reuse the built tables
+# with zero host syncs; entries hold a strong ref to the key array so an
+# id() can never be reused while its entry is alive.
+_DECODE_TABLE_CACHE: "OrderedDict[Tuple[int, int], Tuple[jax.Array, DecodeTable]]" = OrderedDict()
+_DECODE_TABLE_CACHE_SIZE = 64
+
+
+def decode_table(lengths: jax.Array, max_len_static: int) -> DecodeTable:
+    """Cached `build_decode_table`: the (1 << lut_bits)-entry scatter +
+    cummax LUT build runs once per codebook array, not on-device at every
+    restore / eviction-restore step."""
+    key = (id(lengths), int(max_len_static))
+    hit = _DECODE_TABLE_CACHE.get(key)
+    if hit is not None and hit[0] is lengths:
+        _DECODE_TABLE_CACHE.move_to_end(key)
+        return hit[1]
+    tbl = build_decode_table(lengths, int(max_len_static))
+    _DECODE_TABLE_CACHE[key] = (lengths, tbl)
+    while len(_DECODE_TABLE_CACHE) > _DECODE_TABLE_CACHE_SIZE:
+        _DECODE_TABLE_CACHE.popitem(last=False)
+    return tbl
+
+
+def inflate_gap(words: jax.Array, n_valid: jax.Array, gap_bits: jax.Array,
+                table: DecodeTable, sub_size: int, max_len_static: int
+                ) -> jax.Array:
+    """Phase-2 gap-array decode: every subchunk decodes independently from
+    its recorded bit offset, so the sequential walk is `sub_size` symbols
+    (not `chunk_size`) and nc·n_sub subchunks run in lockstep.
+
+    words: [nc, W] uint32; n_valid: [nc]; gap_bits: [nc, W // sub_size].
+    LUT regime (max_len <= LUT_BITS) peeks `lut_bits` bits through the
+    cached LUT; otherwise the canonical length-interval compare decodes a
+    full 32-bit peek without any table (see `DecodeTable`).  Returns
+    codes [nc, W], bit-exact with the sequential `inflate`."""
+    nc, W = words.shape
+    n_sub = gap_bits.shape[1]
+    if n_sub * sub_size != W:
+        raise ValueError(f"gap array [{nc}, {n_sub}] does not tile chunks "
+                         f"of {W} symbols with sub_size={sub_size}")
+    use_lut = max_len_static <= LUT_BITS
+    lut_bits = max(1, max_len_static)
+    cb = table.cb
+
+    def chunk_decode(wrow, nv, gaps):
+        wext = jnp.concatenate([wrow, jnp.zeros((1,), jnp.uint32)])
+        base = jnp.arange(n_sub, dtype=jnp.int32) * sub_size
+
+        def step(bitpos, i):
+            wi = bitpos >> 5
+            bo = (bitpos & 31).astype(jnp.uint32)
+            cur = wext[wi] << bo
+            nxt = jnp.where(bo > 0,
+                            wext[jnp.minimum(wi + 1, W)]
+                            >> (jnp.uint32(32) - bo), jnp.uint32(0))
+            peek = cur | nxt                      # 32-bit left-aligned window
+            if use_lut:
+                slot = (peek >> jnp.uint32(32 - lut_bits)).astype(jnp.int32)
+                sym = table.lut_sym[slot]
+                ln = table.lut_len[slot]
+            else:
+                hit = (peek[:, None] >= table.thresh[None, :]) \
+                    & (table.lmask[None, :] > 0)
+                ln = 1 + jnp.sum(hit.astype(jnp.int32), axis=1)
+                lnc = jnp.clip(ln, 1, MAXLEN)
+                code = peek >> (jnp.uint32(32) - lnc.astype(jnp.uint32))
+                idx = cb.start_idx[lnc] \
+                    + (code - cb.first_code[lnc]).astype(jnp.int32)
+                sym = cb.sym_canon[jnp.clip(idx, 0,
+                                            cb.sym_canon.shape[0] - 1)]
+            ok = (base + i) < nv
+            return bitpos + jnp.where(ok, ln, 0), jnp.where(ok, sym, 0)
+
+        _, syms = jax.lax.scan(step, gaps.astype(jnp.int32),
+                               jnp.arange(sub_size, dtype=jnp.int32))
+        return syms.T.reshape(W)                  # [sub, n_sub] -> chunk order
+
+    return jax.vmap(chunk_decode)(words, n_valid, gap_bits)

@@ -209,7 +209,7 @@ def _stored_size_estimate(codec: codecs.Codec, parts) -> int:
         from repro.core import compressor as CZ
         total = 0
         for p in parts:
-            blob = CZ.CompressedBlob(**{f: p.payload[f]
+            blob = CZ.CompressedBlob(**{f: p.payload.get(f)
                                         for f in CZ.CompressedBlob._fields})
             total += CZ.compressed_bytes(blob, int(p.header.param("nbins")))
         return total

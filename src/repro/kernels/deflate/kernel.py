@@ -11,6 +11,12 @@ TPU-native formulation, one chunk per grid step, all vectorized:
      disjoint-bit patterns is exact) — the same MXU trick as the
      histogram kernel, replacing atomics.
 
+Alongside the packed words the kernel samples the already-computed
+exclusive prefix sums at every `sub_size`-th symbol, emitting the gap
+arrays (bit offset + valid-symbol offset per subchunk boundary) that the
+gap-array inflate kernel decodes from in parallel — the phase-1 half of
+Rivera et al. (arXiv 2201.09118), essentially free at encode time.
+
 VMEM: tile of C=512 symbols -> one-hot [C, C] i32 = 1 MB; fits easily.
 """
 from __future__ import annotations
@@ -22,11 +28,19 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _deflate_kernel(chunk, cw_ref, bw_ref, words_ref, bits_ref):
+def _deflate_kernel(chunk, sub, cw_ref, bw_ref, words_ref, bits_ref,
+                    gbits_ref, gsyms_ref):
     cw = cw_ref[...].reshape(-1).astype(jnp.uint32)          # [C]
     bw = bw_ref[...].reshape(-1).astype(jnp.int32)           # [C]
     offs = jnp.cumsum(bw) - bw                               # exclusive
     bits_ref[...] = (offs[-1] + bw[-1]).reshape(bits_ref.shape)
+
+    # gap arrays: bit / valid-symbol offsets sampled at every sub-th symbol
+    n_sub = chunk // sub
+    gbits_ref[...] = offs.reshape(n_sub, sub)[:, 0].reshape(gbits_ref.shape)
+    valid = (bw > 0).astype(jnp.int32)
+    vcnt = jnp.cumsum(valid) - valid                         # exclusive
+    gsyms_ref[...] = vcnt.reshape(n_sub, sub)[:, 0].reshape(gsyms_ref.shape)
 
     w = (offs >> 5).astype(jnp.int32)
     b = (offs & 31).astype(jnp.int32)
@@ -53,21 +67,26 @@ def _deflate_kernel(chunk, cw_ref, bw_ref, words_ref, bits_ref):
 
 
 def deflate_pallas(cw: jax.Array, bw: jax.Array, chunk_size: int = 512,
-                   interpret: bool = True):
+                   sub_size: int = 128, interpret: bool = True):
     n = cw.shape[0]
     nc = -(-n // chunk_size)
     pad = nc * chunk_size - n
+    n_sub = chunk_size // sub_size
     cwp = jnp.pad(cw.astype(jnp.uint32), (0, pad)).reshape(nc, chunk_size)
     bwp = jnp.pad(bw.astype(jnp.int32), (0, pad)).reshape(nc, chunk_size)
-    words, bits = pl.pallas_call(
-        functools.partial(_deflate_kernel, chunk_size),
+    words, bits, gbits, gsyms = pl.pallas_call(
+        functools.partial(_deflate_kernel, chunk_size, sub_size),
         grid=(nc,),
         in_specs=[pl.BlockSpec((1, chunk_size), lambda i: (i, 0)),
                   pl.BlockSpec((1, chunk_size), lambda i: (i, 0))],
         out_specs=[pl.BlockSpec((1, chunk_size), lambda i: (i, 0)),
-                   pl.BlockSpec((1, 1), lambda i: (i, 0))],
+                   pl.BlockSpec((1, 1), lambda i: (i, 0)),
+                   pl.BlockSpec((1, n_sub), lambda i: (i, 0)),
+                   pl.BlockSpec((1, n_sub), lambda i: (i, 0))],
         out_shape=[jax.ShapeDtypeStruct((nc, chunk_size), jnp.uint32),
-                   jax.ShapeDtypeStruct((nc, 1), jnp.int32)],
+                   jax.ShapeDtypeStruct((nc, 1), jnp.int32),
+                   jax.ShapeDtypeStruct((nc, n_sub), jnp.int32),
+                   jax.ShapeDtypeStruct((nc, n_sub), jnp.int32)],
         interpret=interpret,
     )(cwp, bwp)
-    return words, bits[:, 0]
+    return words, bits[:, 0], gbits, gsyms

@@ -1,4 +1,10 @@
-"""Jit'd public wrapper for the deflate kernel; dispatch-registered."""
+"""Jit'd public wrapper for the deflate kernel; dispatch-registered.
+
+Returns `(words, bits_used, gap_bits, gap_syms)`: alongside the packed
+bitstream, deflate samples its exclusive prefix-sum of bitwidths at every
+`sub_size`-symbol boundary (the gap array of Rivera et al., arXiv
+2201.09118) so the inflate side can decode subchunks in parallel.
+"""
 from __future__ import annotations
 
 from functools import partial
@@ -6,20 +12,27 @@ from typing import Optional
 
 import jax
 
+from repro.core import huffman as hf
+
 from .. import dispatch
 from . import kernel, ref
 
 KERNEL = dispatch.register("deflate", impls=("jax", "pallas"))
 
 
-@partial(jax.jit, static_argnames=("chunk_size", "impl", "interpret"))
-def _deflate_jit(cw, bw, chunk_size: int, impl: str, interpret: bool):
+@partial(jax.jit, static_argnames=("chunk_size", "sub_size", "impl",
+                                   "interpret"))
+def _deflate_jit(cw, bw, chunk_size: int, sub_size: int, impl: str,
+                 interpret: bool):
     if impl == "pallas":
-        return kernel.deflate_pallas(cw, bw, chunk_size, interpret=interpret)
-    return ref.deflate_ref(cw, bw, chunk_size)
+        return kernel.deflate_pallas(cw, bw, chunk_size, sub_size,
+                                     interpret=interpret)
+    return ref.deflate_ref(cw, bw, chunk_size, sub_size)
 
 
-def deflate(cw, bw, chunk_size: int = 512, impl: Optional[str] = None,
-            interpret: Optional[bool] = None):
+def deflate(cw, bw, chunk_size: int = 512, sub_size: int = hf.SUBCHUNK,
+            impl: Optional[str] = None, interpret: Optional[bool] = None):
     r = dispatch.resolve(KERNEL, impl, interpret)
-    return _deflate_jit(cw, bw, chunk_size, r.impl, r.interpret)
+    return _deflate_jit(cw, bw, chunk_size,
+                        hf.norm_sub_size(chunk_size, sub_size),
+                        r.impl, r.interpret)

@@ -4,5 +4,6 @@ import jax
 from repro.core import huffman as hf
 
 
-def deflate_ref(cw: jax.Array, bw: jax.Array, chunk_size: int):
-    return hf.deflate(cw, bw, chunk_size)
+def deflate_ref(cw: jax.Array, bw: jax.Array, chunk_size: int,
+                sub_size: int = hf.SUBCHUNK):
+    return hf.deflate(cw, bw, chunk_size, sub_size)

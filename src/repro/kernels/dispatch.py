@@ -26,14 +26,15 @@ Resolution order (most specific wins):
      threaded through ``pipeline_policy``)
   5. "auto"
 
-A stage registered without a Pallas impl (e.g. `inflate`, which the
-paper is explicit is RAW-bound and which we keep as the LUT/bit-scan
-reference) declares itself jax-only with a reason.  Ambient policies
-("auto", env var, `kernel_policy(...)`, config defaults) still resolve
-such a stage to its jax impl so a forced policy never crashes
-mid-pipeline — but an *explicit* per-call ``impl="pallas"`` request now
-raises `NotImplementedError` carrying the declared reason instead of
-silently measuring the reference path.
+A stage registered without a Pallas impl declares itself jax-only with
+a reason.  Ambient policies ("auto", env var, `kernel_policy(...)`,
+config defaults) still resolve such a stage to its jax impl so a forced
+policy never crashes mid-pipeline — but an *explicit* per-call
+``impl="pallas"`` request raises `NotImplementedError` carrying the
+declared reason instead of silently measuring the reference path.
+(Every pipeline stage currently registers a Pallas impl — `inflate`,
+the last holdout, gained one with the gap-array two-phase decode — but
+the jax-only protocol remains for future stages.)
 """
 from __future__ import annotations
 

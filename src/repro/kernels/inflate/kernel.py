@@ -1,0 +1,135 @@
+"""Pallas TPU kernel: gap-array parallel Huffman inflate (phase 2 of
+Rivera et al., arXiv 2201.09118).
+
+The sequential decoder walks `chunk_size` symbols per chunk because every
+codeword boundary depends on the previous one — the RAW hazard cuSZ §V
+concedes.  The gap array breaks the chain: deflate records the bit offset
+at every `sub_size`-symbol boundary, so each subchunk decodes
+independently from its recorded start and the sequential walk shrinks to
+`sub_size` steps with `n_sub = chunk_size / sub_size` lanes running in
+lockstep.
+
+One chunk per grid step; inside the kernel all `n_sub` subchunk cursors
+advance together.  Per step, for each cursor:
+
+  1. fetch the two words straddling the cursor's bit position via ONE-HOT
+     CONTRACTIONS over the word index (the repo's standing MXU idiom —
+     int32 matmuls are bit-exact, and an out-of-range index matches no
+     one-hot row, yielding 0 exactly like a zero-padded stream);
+  2. splice the 32-bit left-aligned peek window;
+  3. canonical length-interval compare: left-aligned code intervals tile
+     [0, 2^32) contiguously in length order, so
+     `len = 1 + sum_l lmask[l] * [peek >= thresh[l]]` — no LUT in VMEM
+     (the dense LUT would be a 2^16-entry gather; the compare is ~32
+     lane-ops and serves every max-length regime);
+  4. index the canonical symbol table, again via one-hot contraction.
+
+Emitted symbols land in a [n_sub, sub_size] tile whose row-major reshape
+is exactly chunk order.  Bit-exact with `core.huffman.inflate_gap` (the
+vmapped jax reference of the same shape) and with the sequential decoder.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import huffman as hf
+
+_TB = 64                     # padded table-row lanes (MAXLEN + 1 = 33)
+
+
+def _gather_i32(idx, table_row):
+    """table_row[idx] for a vector of indices, as a one-hot int32 matmul.
+
+    idx: [n] int32; table_row: [T] int32.  Out-of-range idx -> 0."""
+    n = idx.shape[0]
+    t = table_row.shape[0]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (n, t), 1)
+    oh = (idx[:, None] == iota).astype(jnp.int32)
+    return jax.lax.dot_general(oh, table_row[:, None],
+                               (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.int32)[:, 0]
+
+
+def _inflate_kernel(sub, n_sub, words_ref, gaps_ref, nv_ref, thresh_ref,
+                    lmask_ref, fcode_ref, sidx_ref, scanon_ref, out_ref):
+    W = n_sub * sub
+    wrow = words_ref[...].reshape(-1).astype(jnp.int32)       # [W] bit-cast
+    gaps = gaps_ref[...].reshape(-1).astype(jnp.int32)        # [n_sub]
+    nv = nv_ref[0, 0]
+    thresh = thresh_ref[...].reshape(-1)                      # [TB] uint32
+    lmask = lmask_ref[...].reshape(-1)                        # [TB] int32
+    fcode = fcode_ref[...].reshape(-1).astype(jnp.int32)      # [TB] bit-cast
+    sidx = sidx_ref[...].reshape(-1)                          # [TB] int32
+    scanon = scanon_ref[...].reshape(-1)                      # [K] int32
+    base = jnp.arange(n_sub, dtype=jnp.int32) * sub
+
+    def step(i, carry):
+        bitpos, out = carry
+        wi = bitpos >> 5
+        bo = (bitpos & 31).astype(jnp.uint32)
+        cur = _gather_i32(wi, wrow).astype(jnp.uint32) << bo
+        nxt_w = _gather_i32(wi + 1, wrow).astype(jnp.uint32)
+        nxt = jnp.where(bo > 0, nxt_w >> (jnp.uint32(32) - bo),
+                        jnp.uint32(0))
+        peek = cur | nxt                  # 32-bit left-aligned window
+        hit = (peek[:, None] >= thresh[None, :]) & (lmask[None, :] > 0)
+        ln = 1 + jnp.sum(hit.astype(jnp.int32), axis=1)
+        lnc = jnp.clip(ln, 1, hf.MAXLEN)
+        code = peek >> (jnp.uint32(32) - lnc.astype(jnp.uint32))
+        fc = _gather_i32(lnc, fcode)
+        si = _gather_i32(lnc, sidx)
+        idx = si + code.astype(jnp.int32) - fc
+        sym = _gather_i32(jnp.clip(idx, 0, scanon.shape[0] - 1), scanon)
+        ok = (base + i) < nv
+        out = jax.lax.dynamic_update_slice(
+            out, jnp.where(ok, sym, 0)[:, None], (0, i))
+        return bitpos + jnp.where(ok, ln, 0), out
+
+    _, out = jax.lax.fori_loop(
+        0, sub, step,
+        (gaps, jnp.zeros((n_sub, sub), jnp.int32)))
+    out_ref[...] = out.reshape(out_ref.shape)   # [n_sub, sub] -> chunk order
+
+
+def _pad_row(x, n, dtype):
+    x = jnp.asarray(x, dtype)
+    return jnp.pad(x, (0, n - x.shape[0]))[None, :]
+
+
+def inflate_pallas(words: jax.Array, n_valid: jax.Array, gap_bits: jax.Array,
+                   table: hf.DecodeTable, sub_size: int,
+                   interpret: bool = True) -> jax.Array:
+    """words: [nc, W] uint32, n_valid: [nc], gap_bits: [nc, W//sub_size].
+    Returns codes [nc, W] int32 (chunk order)."""
+    nc, W = words.shape
+    n_sub = gap_bits.shape[1]
+    if n_sub * sub_size != W:
+        raise ValueError(f"gap array [{nc}, {n_sub}] does not tile chunks "
+                         f"of {W} symbols with sub_size={sub_size}")
+    cb = table.cb
+    k = cb.sym_canon.shape[0]
+    kp = -(-k // 128) * 128                     # lane-pad the symbol table
+    thresh = _pad_row(table.thresh, _TB, jnp.uint32)
+    lmask = _pad_row(table.lmask, _TB, jnp.int32)
+    fcode = _pad_row(cb.first_code, _TB, jnp.uint32)
+    sidx = _pad_row(cb.start_idx, _TB, jnp.int32)
+    scanon = _pad_row(cb.sym_canon, kp, jnp.int32)
+    tspec = pl.BlockSpec((1, _TB), lambda i: (0, 0))
+    return pl.pallas_call(
+        functools.partial(_inflate_kernel, sub_size, n_sub),
+        grid=(nc,),
+        in_specs=[pl.BlockSpec((1, W), lambda i: (i, 0)),
+                  pl.BlockSpec((1, n_sub), lambda i: (i, 0)),
+                  pl.BlockSpec((1, 1), lambda i: (i, 0)),
+                  tspec, tspec, tspec, tspec,
+                  pl.BlockSpec((1, kp), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((1, W), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nc, W), jnp.int32),
+        interpret=interpret,
+    )(words, gap_bits.astype(jnp.int32),
+      n_valid.astype(jnp.int32).reshape(nc, 1),
+      thresh, lmask, fcode, sidx, scanon)

@@ -1,14 +1,30 @@
-"""Reference impl for the inflate stage (= core/huffman.inflate).
+"""Reference impls for the inflate stage (= core/huffman decoders).
 
-The LUT path (max codeword length <= LUT_BITS) decodes O(symbols) per
-chunk; the bit-scan fallback is O(bits).  Both are vmapped over chunks,
-which is exactly the paper's coarse-grained inflate parallelism.
+`inflate_gap_ref` is the vmapped jax gap-array decoder — same shape as
+the Pallas kernel (n_sub lockstep subchunk cursors per chunk, `sub_size`
+sequential steps each) and bit-exact with it.  `inflate_seq_ref` is the
+legacy per-chunk sequential decode kept for gap-less (format v1)
+streams: LUT path when the max codeword length permits, bit-scan
+fallback otherwise.
 """
 import jax
 
 from repro.core import huffman as hf
 
 
-def inflate_ref(words: jax.Array, bits_used: jax.Array, n_valid: jax.Array,
-                cb, max_len_static: int) -> jax.Array:
-    return hf.inflate(words, bits_used, n_valid, cb, max_len_static)
+def inflate_seq_ref(words: jax.Array, bits_used: jax.Array,
+                    n_valid: jax.Array, table, max_len_static: int
+                    ) -> jax.Array:
+    if max_len_static <= hf.LUT_BITS:
+        # prebuilt LUT from the DecodeTable — the scatter+cummax build no
+        # longer re-runs inside this decode trace
+        return hf.inflate_lut(words, n_valid, table.cb,
+                              lut_bits=max(1, max_len_static),
+                              lut=(table.lut_sym, table.lut_len))
+    return hf.inflate_bitscan(words, bits_used, n_valid, table.cb)
+
+
+def inflate_gap_ref(words: jax.Array, n_valid: jax.Array, gap_bits: jax.Array,
+                    table, sub_size: int, max_len_static: int) -> jax.Array:
+    return hf.inflate_gap(words, n_valid, gap_bits, table, sub_size,
+                          max_len_static)

@@ -244,6 +244,37 @@ class TestSelfDescribingContainer:
             c, like=jax.ShapeDtypeStruct((4, 128), jnp.float16))
         assert out.dtype == jnp.float16
 
+    def test_cusz_v1_gapless_container_still_decodes(self):
+        """Back-compat: a format-v1 container (no gap arrays, no sub_size
+        header param) decodes through the legacy sequential path."""
+        x = _field((40, 64), seed=21)
+        codec = codecs.get("cusz", eb=1e-3, eb_mode="valrel", chunk_size=512)
+        c = codec.encode(x)
+        assert c.header.version == 2
+        assert "gap_bits" in c.payload and "gap_syms" in c.payload
+        v1 = codecs.Container(
+            dataclasses.replace(c.header.without_params("sub_size"),
+                                version=1),
+            {k: v for k, v in c.payload.items()
+             if k not in ("gap_bits", "gap_syms")})
+        y = codecs.decode(v1)
+        assert M.verify_error_bound(x, y, c.header.param("eb"))
+        # bit-exact with the gap-array decode of the same stream
+        np.testing.assert_array_equal(np.asarray(y),
+                                      np.asarray(codecs.decode(c)))
+        # packed v1 storage form roundtrips too
+        p1 = codec.pack(v1)
+        assert "gap_bits" not in p1.payload
+        np.testing.assert_array_equal(np.asarray(codecs.decode(p1)),
+                                      np.asarray(y))
+
+    def test_cusz_future_version_rejected_actionably(self):
+        c = codecs.get("cusz", eb=1e-3, eb_mode="valrel").encode(
+            _field((8, 64)))
+        newer = c.replace(header=dataclasses.replace(c.header, version=7))
+        with pytest.raises(ValueError, match=r"cusz v7"):
+            codecs.decode(newer)
+
     def test_cusz_valid_flags_outlier_overflow(self):
         # tiny outlier capacity + rough data -> overflow -> invalid
         rng = np.random.default_rng(12)

@@ -93,7 +93,9 @@ class TestAccounting:
         total = C.compressed_bytes(blob, cfg.nbins)
         bits = np.asarray(blob.bits_used, dtype=np.int64)
         stream = int(np.sum((bits + 31) // 32) * 4)
-        assert total == stream + int(blob.n_outliers) * 8 + 256 + C.HEADER_BYTES
+        gaps = blob.gap_bits.size * 4 + blob.gap_syms.size * 2
+        assert total == stream + int(blob.n_outliers) * 8 + 256 + gaps \
+            + C.HEADER_BYTES
 
     def test_nbins_sweep_bound_held(self):
         f = jnp.asarray(FIELDS["hacc"])[:65536]

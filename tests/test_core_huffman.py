@@ -89,7 +89,7 @@ class TestRoundtrip:
         freq = hf.histogram(jnp.asarray(codes), k)
         cb = hf.canonical_codebook(hf.codeword_lengths(freq))
         cw, bw = hf.encode(jnp.asarray(codes), cb)
-        words, bits = hf.deflate(cw, bw, chunk)
+        words, bits, *_ = hf.deflate(cw, bw, chunk)
         nc = words.shape[0]
         n_valid = np.minimum(chunk, np.maximum(n - np.arange(nc) * chunk, 0)).astype(np.int32)
         out = np.asarray(hf.inflate_lut(words, jnp.asarray(n_valid), cb))
@@ -101,7 +101,7 @@ class TestRoundtrip:
         freq = hf.histogram(jnp.asarray(codes), 32)
         cb = hf.canonical_codebook(hf.codeword_lengths(freq))
         cw, bw = hf.encode(jnp.asarray(codes), cb)
-        words, bits = hf.deflate(cw, bw, 128)
+        words, bits, *_ = hf.deflate(cw, bw, 128)
         nc = words.shape[0]
         n_valid = np.minimum(128, np.maximum(600 - np.arange(nc) * 128, 0)).astype(np.int32)
         out = np.asarray(hf.inflate_bitscan(words, bits, jnp.asarray(n_valid), cb))
@@ -118,7 +118,7 @@ class TestRoundtrip:
         freq = hf.histogram(jnp.asarray(codes), k)
         cb = hf.canonical_codebook(hf.codeword_lengths(freq))
         cw, bw = hf.encode(jnp.asarray(codes), cb)
-        words, bits = hf.deflate(cw, bw, chunk)
+        words, bits, *_ = hf.deflate(cw, bw, chunk)
         nc = words.shape[0]
         n_valid = np.minimum(chunk, np.maximum(n - np.arange(nc) * chunk, 0)).astype(np.int32)
         out = np.asarray(hf.inflate(words, bits, jnp.asarray(n_valid), cb,
@@ -132,8 +132,108 @@ class TestRoundtrip:
         freq = hf.histogram(jnp.asarray(codes), 32)
         cb = hf.canonical_codebook(hf.codeword_lengths(freq))
         cw, bw = hf.encode(jnp.asarray(codes), cb)
-        words, bits = hf.deflate(cw, bw, 256)
+        words, bits, *_ = hf.deflate(cw, bw, 256)
         bwn = np.asarray(bw)
         for c in range(words.shape[0]):
             seg = bwn[c * 256:(c + 1) * 256]
             assert int(bits[c]) == int(seg.sum())
+
+
+# ---------------------------------------------------------------------------
+# Gap-array two-phase decode (Rivera et al., arXiv 2201.09118)
+# ---------------------------------------------------------------------------
+
+def _skewed_codes(rng, n, k):
+    """Exponentially-skewed stream -> deep tree (bitscan regime)."""
+    p = 2.0 ** -np.arange(1, k + 1)
+    p /= p.sum()
+    return rng.choice(k, size=n, p=p).astype(np.int32)
+
+
+def _encode_stream(codes, k, chunk, sub):
+    freq = hf.histogram(jnp.asarray(codes), k)
+    cb = hf.canonical_codebook(hf.codeword_lengths(freq))
+    cw, bw = hf.encode(jnp.asarray(codes), cb)
+    words, bits, gap_bits, gap_syms = hf.deflate(cw, bw, chunk, sub)
+    nc = words.shape[0]
+    n = codes.shape[0]
+    n_valid = jnp.asarray(np.minimum(
+        chunk, np.maximum(n - np.arange(nc) * chunk, 0)).astype(np.int32))
+    return cb, words, bits, n_valid, gap_bits, gap_syms
+
+
+class TestGapDecode:
+    @given(st.integers(0, 2**31 - 1), st.sampled_from([128, 256, 512]),
+           st.sampled_from([32, 64, 128]), st.booleans())
+    @settings(max_examples=25, deadline=None)
+    def test_parity_vs_sequential(self, seed, chunk, sub, deep):
+        """Gap decode (jax AND pallas-interpret) is bit-exact with the
+        sequential reference across chunk/sub sizes and both the LUT and
+        bitscan max-codeword-length regimes."""
+        from repro.kernels.inflate import ops as inflate_ops
+        sub = min(sub, chunk)
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(1, 3000))
+        k = 24 if deep else 64
+        codes = (_skewed_codes(rng, n, k) if deep
+                 else rng.integers(0, k, n).astype(np.int32))
+        cb, words, bits, n_valid, gap_bits, _ = _encode_stream(
+            codes, k, chunk, sub)
+        ml = hf.bucket_max_len(max(1, int(cb.max_len)))
+        table = hf.decode_table(cb.lengths, ml)
+        seq = np.asarray(hf.inflate(words, bits, n_valid, cb, ml))
+        gj = np.asarray(hf.inflate_gap(words, n_valid, gap_bits, table,
+                                       sub, ml))
+        gp = np.asarray(inflate_ops.inflate(
+            words, bits, n_valid, table, ml, gaps=gap_bits,
+            impl="pallas-interpret"))
+        np.testing.assert_array_equal(gj, seq)
+        np.testing.assert_array_equal(gp, seq)
+        np.testing.assert_array_equal(gj.reshape(-1)[:n], codes)
+
+    def test_gap_arrays_match_prefix_sums(self):
+        """gap_bits samples the exclusive bit prefix-sum, gap_syms the
+        exclusive valid-symbol count, at every sub boundary."""
+        rng = np.random.default_rng(17)
+        codes = _random_codes(rng, 1000, 64)
+        cb, words, bits, n_valid, gap_bits, gap_syms = _encode_stream(
+            codes, 64, 256, 64)
+        cw, bw = hf.encode(jnp.asarray(codes), cb)
+        bwn = np.asarray(bw)
+        pad = words.shape[0] * 256 - bwn.shape[0]
+        bwn = np.pad(bwn, (0, pad)).reshape(-1, 256)
+        for c in range(words.shape[0]):
+            offs = np.cumsum(bwn[c]) - bwn[c]
+            np.testing.assert_array_equal(np.asarray(gap_bits)[c],
+                                          offs[::64])
+            valid = (bwn[c] > 0).astype(np.int64)
+            vcnt = np.cumsum(valid) - valid
+            np.testing.assert_array_equal(np.asarray(gap_syms)[c],
+                                          vcnt[::64])
+
+    def test_sub_size_must_divide_chunk(self):
+        with pytest.raises(ValueError, match="divide"):
+            hf.norm_sub_size(512, 100)
+        assert hf.norm_sub_size(512, 64) == 64
+        assert hf.norm_sub_size(32, 64) == 32    # clamped to the chunk
+
+    def test_bucket_max_len(self):
+        assert hf.bucket_max_len(1) == 8
+        assert hf.bucket_max_len(8) == 8
+        assert hf.bucket_max_len(9) == 12
+        assert hf.bucket_max_len(13) == 16
+        assert hf.bucket_max_len(17) == hf.MAXLEN
+
+    def test_decode_table_cache_identity(self):
+        """Same lengths array -> same cached table object; a fresh array
+        (even equal-valued) builds its own entry."""
+        freq = hf.histogram(jnp.asarray(_random_codes(
+            np.random.default_rng(2), 500, 32)), 32)
+        lengths = hf.codeword_lengths(freq)
+        t1 = hf.decode_table(lengths, 8)
+        t2 = hf.decode_table(lengths, 8)
+        assert t1 is t2
+        t3 = hf.decode_table(jnp.array(lengths), 8)
+        assert t3 is not t1
+        np.testing.assert_array_equal(np.asarray(t3.lut_sym),
+                                      np.asarray(t1.lut_sym))

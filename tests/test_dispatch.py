@@ -33,7 +33,8 @@ class TestPolicyResolution:
         reg = dispatch.registered()
         for stage in dispatch.PIPELINE_STAGES:
             assert stage in reg, stage
-        assert reg["inflate"] == ("jax",)          # RAW-bound: reference only
+        # gap-array two-phase decode gave inflate a real pallas impl
+        assert reg["inflate"] == ("jax", "pallas")
 
     def test_auto_is_reference_on_cpu(self):
         assert jax.default_backend() == "cpu"
@@ -49,25 +50,57 @@ class TestPolicyResolution:
         assert r == dispatch.Resolved("pallas", True)
 
     def test_explicit_pallas_on_jax_only_raises(self):
-        # an explicit per-call request must not silently measure the
-        # reference path; the error carries the declared reason
-        with pytest.raises(NotImplementedError, match="RAW-bound"):
-            dispatch.resolve("inflate", impl="pallas")
+        # the jax-only protocol outlived inflate's graduation to a real
+        # pallas impl; exercise it on a synthetic registration
+        dispatch.register("testonly.seq", impls=("jax",),
+                          jax_only_reason="synthetic: protocol test")
+        try:
+            # an explicit per-call request must not silently measure the
+            # reference path; the error carries the declared reason
+            with pytest.raises(NotImplementedError, match="synthetic"):
+                dispatch.resolve("testonly.seq", impl="pallas")
+        finally:
+            dispatch._REGISTRY.pop("testonly.seq", None)
+            dispatch._JAX_ONLY_REASON.pop("testonly.seq", None)
 
     def test_ambient_pallas_on_jax_only_falls_back(self):
         # forwarded policy/config impls keep the documented fallback so a
-        # forced pipeline never crashes on the jax-only stage
-        with dispatch.kernel_policy("pallas"):
-            assert dispatch.resolve("inflate") == \
+        # forced pipeline never crashes on a jax-only stage
+        dispatch.register("testonly.seq", impls=("jax",),
+                          jax_only_reason="synthetic: protocol test")
+        try:
+            with dispatch.kernel_policy("pallas"):
+                assert dispatch.resolve("testonly.seq") == \
+                    dispatch.Resolved("jax", False)
+            assert dispatch.resolve("testonly.seq", "pallas",
+                                    explicit=False) == \
                 dispatch.Resolved("jax", False)
-        assert dispatch.resolve("inflate", "pallas", explicit=False) == \
-            dispatch.Resolved("jax", False)
-        pp = dispatch.pipeline_policy("pallas")
-        assert pp.inflate == dispatch.Resolved("jax", False)
+        finally:
+            dispatch._REGISTRY.pop("testonly.seq", None)
+            dispatch._JAX_ONLY_REASON.pop("testonly.seq", None)
 
     def test_jax_only_reason_recorded(self):
-        assert "RAW-bound" in dispatch.jax_only_reason("inflate")
+        dispatch.register("testonly.seq", impls=("jax",),
+                          jax_only_reason="synthetic: protocol test")
+        try:
+            assert "synthetic" in dispatch.jax_only_reason("testonly.seq")
+        finally:
+            dispatch._REGISTRY.pop("testonly.seq", None)
+            dispatch._JAX_ONLY_REASON.pop("testonly.seq", None)
         assert dispatch.jax_only_reason("histogram") is None
+        assert dispatch.jax_only_reason("inflate") is None   # graduated
+
+    def test_explicit_pallas_inflate_without_gaps_raises(self):
+        # the pallas inflate IS the gap decoder: explicitly requesting it
+        # on a gap-less (format v1) stream must raise, not silently
+        # measure the sequential reference
+        words = jnp.zeros((1, 64), jnp.uint32)
+        table = hf.decode_table(
+            hf.codeword_lengths(jnp.asarray([5, 5], jnp.int32)), 8)
+        with pytest.raises(NotImplementedError, match="gap"):
+            inflate_ops.inflate(words, jnp.zeros((1,), jnp.int32),
+                                jnp.zeros((1,), jnp.int32), table, 8,
+                                impl="pallas-interpret")
 
     def test_env_var_policy(self, monkeypatch):
         monkeypatch.setenv(dispatch.ENV_VAR, "pallas-interpret")
@@ -97,9 +130,8 @@ class TestPolicyResolution:
     def test_pipeline_policy_from_config_default(self):
         pp = dispatch.pipeline_policy("pallas-interpret")
         for stage in ("dualquant", "reverse", "histogram", "encode",
-                      "deflate"):
+                      "deflate", "inflate"):
             assert getattr(pp, stage) == dispatch.Resolved("pallas", True)
-        assert pp.inflate == dispatch.Resolved("jax", False)
 
     def test_ambient_beats_config_default(self):
         with dispatch.kernel_policy("jax"):
@@ -170,10 +202,13 @@ class TestParity:
         cr, br = encode_ops.encode(codes, cb, impl="jax")
         np.testing.assert_array_equal(np.asarray(ck), np.asarray(cr))
         np.testing.assert_array_equal(np.asarray(bk), np.asarray(br))
-        wk, ik = deflate_ops.deflate(ck, bk, 512, impl="pallas-interpret")
-        wr, ir = deflate_ops.deflate(cr, br, 512, impl="jax")
+        wk, ik, gbk, gsk = deflate_ops.deflate(ck, bk, 512,
+                                               impl="pallas-interpret")
+        wr, ir, gbr, gsr = deflate_ops.deflate(cr, br, 512, impl="jax")
         np.testing.assert_array_equal(np.asarray(wk), np.asarray(wr))
         np.testing.assert_array_equal(np.asarray(ik), np.asarray(ir))
+        np.testing.assert_array_equal(np.asarray(gbk), np.asarray(gbr))
+        np.testing.assert_array_equal(np.asarray(gsk), np.asarray(gsr))
 
     def test_fused_matches_unfused_reference(self):
         """The fused kernels-op output == the two-dispatch reference form
@@ -241,7 +276,7 @@ class TestPackUnpack:
         # meaningful prefix + every dense field exactly
         n_out = int(blob.n_outliers)
         for fld in ("words", "bits_used", "n_valid", "lengths",
-                    "n_outliers", "max_len"):
+                    "n_outliers", "max_len", "gap_bits", "gap_syms"):
             np.testing.assert_array_equal(
                 np.asarray(getattr(blob, fld)),
                 np.asarray(getattr(blob2, fld)), err_msg=fld)

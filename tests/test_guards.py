@@ -111,6 +111,27 @@ class TestSyncCleanPaths:
         # the boundary crossings that did happen are the waived ones
         assert log.allowed_hits
 
+    def test_cusz_valid_sync_is_waived_on_restore_path(self,
+                                                       host_sync_sanitizer):
+        """`CuszCodec.valid` reads back one scalar (`n_outliers`) — a
+        deliberate, statically waived host sync.  The restore-side
+        validity check must stay inside that waiver: zero unwaived
+        violations, and the sync that does happen hits the allowlist."""
+        from repro import codecs
+
+        x = jnp.linspace(-2.0, 2.0, 4096).reshape(32, 128)
+        codec = codecs.get("cusz")
+        c = codec.encode(x)
+        with host_sync_sanitizer() as log:
+            assert codec.valid(c)
+        assert log.violations == []
+        assert log.allowed_hits           # the waived device_get fired
+        # packed containers are post-validation: no sync at all
+        p = codec.pack(c)
+        with host_sync_sanitizer() as log2:
+            assert codec.valid(p)
+        assert log2.violations == []
+
     def test_codec_roundtrip_sync_clean(self, host_sync_sanitizer):
         from repro import codecs
 

@@ -104,10 +104,12 @@ class TestDeflateKernel:
         codes = jnp.asarray(rng.choice(k, n, p=p / p.sum()).astype(np.int32))
         cb = hf.canonical_codebook(hf.codeword_lengths(hf.histogram(codes, k)))
         cw, bw = hf.encode(codes, cb)
-        wk, bk = deflate_ops.deflate(cw, bw, chunk, impl="pallas")
-        wr, br = deflate_ops.deflate(cw, bw, chunk, impl="jax")
+        wk, bk, gbk, gsk = deflate_ops.deflate(cw, bw, chunk, impl="pallas")
+        wr, br, gbr, gsr = deflate_ops.deflate(cw, bw, chunk, impl="jax")
         np.testing.assert_array_equal(np.asarray(wk), np.asarray(wr))
         np.testing.assert_array_equal(np.asarray(bk), np.asarray(br))
+        np.testing.assert_array_equal(np.asarray(gbk), np.asarray(gbr))
+        np.testing.assert_array_equal(np.asarray(gsk), np.asarray(gsr))
 
     def test_kernel_stream_decodes(self):
         """Kernel-produced bitstream must inflate back to the input."""
@@ -117,10 +119,39 @@ class TestDeflateKernel:
         cb = hf.canonical_codebook(hf.codeword_lengths(
             hf.histogram(jnp.asarray(codes), k)))
         cw, bw = hf.encode(jnp.asarray(codes), cb)
-        words, bits = deflate_ops.deflate(cw, bw, chunk, impl="pallas")
+        words, bits, gap_bits, _ = deflate_ops.deflate(cw, bw, chunk,
+                                                       impl="pallas")
         nc = words.shape[0]
         n_valid = np.minimum(chunk, np.maximum(n - np.arange(nc) * chunk, 0)
                              ).astype(np.int32)
         out = np.asarray(hf.inflate(words, bits, jnp.asarray(n_valid), cb,
                                     int(cb.max_len)))
+        np.testing.assert_array_equal(out.reshape(-1)[:n], codes)
+
+
+class TestInflateKernel:
+    @pytest.mark.parametrize("n,k,chunk,sub", [(2000, 128, 512, 64),
+                                               (700, 1024, 256, 32),
+                                               (4096, 64, 512, 128)])
+    def test_gap_kernel_matches_sequential(self, n, k, chunk, sub):
+        """Pallas gap-array inflate == sequential reference, bit-exact;
+        the decoded stream equals the original codes."""
+        from repro.kernels.inflate import ops as inflate_ops
+        rng = np.random.default_rng(n + k)
+        codes = rng.integers(0, k, n).astype(np.int32)
+        cb = hf.canonical_codebook(hf.codeword_lengths(
+            hf.histogram(jnp.asarray(codes), k)))
+        cw, bw = hf.encode(jnp.asarray(codes), cb)
+        words, bits, gap_bits, _ = deflate_ops.deflate(
+            cw, bw, chunk, sub, impl="pallas")
+        nv = jnp.asarray(np.minimum(
+            chunk, np.maximum(n - np.arange(words.shape[0]) * chunk, 0)
+        ).astype(np.int32))
+        ml = hf.bucket_max_len(max(1, int(cb.max_len)))
+        table = hf.decode_table(cb.lengths, ml)
+        seq = np.asarray(hf.inflate(words, bits, nv, cb, ml))
+        out = np.asarray(inflate_ops.inflate(
+            words, bits, nv, table, ml, gaps=gap_bits,
+            impl="pallas-interpret"))
+        np.testing.assert_array_equal(out, seq)
         np.testing.assert_array_equal(out.reshape(-1)[:n], codes)
