@@ -13,6 +13,9 @@ prefill->decode mesh boundary costs per wire codec:
     throughput codec).
   * ``cusz``       — the full dual-quant + Huffman pipeline per slab
     (the host-offload/storage leg).
+  * ``fz``         — Lorenzo + fused bitshuffle with zero-plane elision
+    (the error-bounded throughput wire: no codebook on encode, no host
+    prep on decode).
 
 Writes ``BENCH_reshard.json`` records ``{wire, source, wire_bytes,
 raw_bf16_bytes, ratio, encode_s, reshard_s, containers}``.
@@ -34,7 +37,7 @@ from .common import emit, write_json
 
 JSON_NAME = "BENCH_reshard.json"
 
-WIRES = ("lossless", "int8-block", "cusz")
+WIRES = ("lossless", "int8-block", "cusz", "fz")
 
 
 def _sweep(cfg, params, prompt, scfg, source: str, records: list) -> None:

@@ -109,6 +109,19 @@ def main(small: bool = False, json_dir: str = ".") -> None:
     # steps for the same emitted tokens at the same pool budget
     assert cont["tokens"] == stat["tokens"], records
     assert cont["n_steps"] <= stat["n_steps"], records
+    # same continuous trace with the fz eviction codec: the scheduler's
+    # admission decisions must not change (page count, not page bytes,
+    # drives scheduling), so tokens/steps match the int8-block run
+    fz_cfg = S.SchedulerConfig(max_batch=max_batch, pool_pages=pool_pages,
+                               evict_codec="fz")
+    rec_fz = _run_mode(params, cfg, scfg, fz_cfg, reqs, "continuous")
+    rec_fz["mode"] = "continuous-fz"
+    records.append(rec_fz)
+    emit("serve_load_continuous_fz", rec_fz["n_steps"],
+         f"tokens_per_s={rec_fz['tokens_per_s']};p99_s={rec_fz['p99_s']};"
+         f"n_steps={rec_fz['n_steps']}")
+    assert rec_fz["tokens"] == cont["tokens"], records
+    assert rec_fz["n_steps"] == cont["n_steps"], records
     write_json(os.path.join(json_dir, JSON_NAME), records)
 
 

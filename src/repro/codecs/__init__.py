@@ -9,6 +9,10 @@ Registered codecs:
 
     "cusz"        full dual-quant + canonical-Huffman pipeline (error-
                   bounded; kernel dispatch via `kernel_impl=`)
+    "cusz-i"      cuSZ-i: multi-level interpolation predictor + the same
+                  Huffman encoder (higher ratio on smooth fields)
+    "fz"          FZ-GPU: Lorenzo predictor + fused bitshuffle encoder
+                  with zero-plane elision (wire/eviction throughput class)
     "int8"        per-tensor symmetric int8 (eb = scale/2)
     "int16"       per-tensor symmetric int16
     "int8-block"  blockwise int8 along one axis (KV cache / FSDP weight
@@ -30,14 +34,16 @@ from .container import (CONTAINER_FORMAT, ChecksumError,  # noqa: F401
                         verify_container)
 
 # importing the implementation modules populates the registry
-from . import cusz as cusz            # noqa: F401
-from . import int8 as int8            # noqa: F401
-from . import lossless as lossless    # noqa: F401
-from . import zfp as zfp              # noqa: F401
+from . import cusz as cusz                # noqa: F401
+from . import cusz_interp as cusz_interp  # noqa: F401
+from . import fz as fz                    # noqa: F401
+from . import int8 as int8                # noqa: F401
+from . import lossless as lossless        # noqa: F401
+from . import zfp as zfp                  # noqa: F401
 
 __all__ = ["Codec", "Container", "Header", "CONTAINER_FORMAT",
            "ChecksumError", "check_container", "payload_crc32",
            "stamp_checksum", "verify_container",
            "decode", "get", "get_block_codec", "names", "register",
            "to_arrays", "from_arrays", "make_header", "concat_containers",
-           "cusz", "int8", "lossless", "zfp"]
+           "cusz", "cusz_interp", "fz", "int8", "lossless", "zfp"]

@@ -55,10 +55,13 @@ class CuszCodec(Codec):
         x32 = jnp.asarray(x, jnp.float32) \
             if jnp.asarray(x).dtype != jnp.float32 else jnp.asarray(x)
         blob, eb = CZ.compress(x32, c)
+        # "predictor" is recorded only when non-default so lorenzo headers
+        # stay bit-identical to every container written before stages
+        extra = {} if c.predictor == "lorenzo" else {"predictor": c.predictor}
         header = self._header(
             x, eb=float(eb), nbins=int(c.nbins), chunk_size=int(c.chunk_size),
             sub_size=int(c.sub_size), block=tuple(c.block_for(x32.ndim)),
-            outlier_frac=float(c.outlier_frac))
+            outlier_frac=float(c.outlier_frac), **extra)
         return Container(header, _blob_payload(blob))
 
     def decode(self, c: Container, *, like=None) -> jax.Array:
@@ -105,6 +108,7 @@ class CuszCodec(Codec):
             sub_size=int(h.param("sub_size", 128)),
             block=tuple(h.param("block")),
             outlier_frac=float(h.param("outlier_frac")),
+            predictor=str(h.param("predictor", "lorenzo")),
             kernel_impl=self.cfg.kernel_impl)
 
 

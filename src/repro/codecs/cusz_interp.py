@@ -1,0 +1,47 @@
+"""cuSZ-i ("cusz-i"): the interpolation predictor composed with the
+canonical-Huffman encoder, behind the same `Codec` protocol.
+
+This codec is the staged pipeline's poster child: it is `CuszCodec`
+verbatim with `CompressorConfig.predictor` flipped to "interp" — every
+container/pack/valid path is inherited, because the blob surface is
+stage-generic (the interp anchor grid rides in the blob's optional
+`anchor` field).  On smooth fields the multi-level cubic interpolation
+leaves far smaller residuals than blocked Lorenzo, which concentrates
+the quant-code histogram and buys ratio at the same error bound
+(arXiv 2312.05492).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core import compressor as CZ
+
+from .base import register
+from .cusz import CuszCodec
+
+
+@dataclasses.dataclass(frozen=True)
+class CuszInterpCodec(CuszCodec):
+    cfg: CZ.CompressorConfig = CZ.CompressorConfig(predictor="interp")
+    name = "cusz-i"
+    version = 1
+    # Interpolation levels span the whole tensor (even/odd lifting across
+    # every axis): slice-independent encodes change the decode, so
+    # sharded saves keep each leaf whole on one owner shard.
+    shardable = False
+
+    @staticmethod
+    def make(cfg: Optional[CZ.CompressorConfig] = None,
+             **kw) -> "CuszInterpCodec":
+        if cfg is None:
+            kw.setdefault("predictor", "interp")
+            cfg = CZ.CompressorConfig(**kw)
+        elif kw:
+            cfg = dataclasses.replace(cfg, **kw)
+        if cfg.predictor != "interp":
+            cfg = dataclasses.replace(cfg, predictor="interp")
+        return CuszInterpCodec(cfg=cfg)
+
+
+register("cusz-i", CuszInterpCodec.make)

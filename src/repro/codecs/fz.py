@@ -1,0 +1,122 @@
+"""FZ ("fz"): Lorenzo prediction + fused bit-plane shuffle with
+zero-plane elision (FZ-GPU, arXiv 2304.12557), behind the `Codec`
+protocol.
+
+Where "cusz" pays for a histogram, a device codebook build and a
+scatter-heavy Huffman deflate, fz's lossless stage is a single fused
+kernel pass (zigzag map + per-chunk bitshuffle) plus a cheap nonzero
+reduction — the wire/eviction throughput class.  The decode needs no
+host-side prep at all (no codebook or max-length readback), so arrival
+paths stay free of host syncs.
+
+The codec composes the staged pipeline's dict surface directly
+(`staged_compress` / `staged_decompress` / `StagedPipeline` pack/unpack)
+— no blob NamedTuple involved, demonstrating the second supported codec
+shape on top of the stage registries.
+
+Defaults target the KV-wire operating point: valrel 1e-2 bound,
+outlier_frac=1.0 (no capacity overflow on activation-scale data) and a
+512-symbol chunk so the plane elision granularity matches head-dim-sized
+slabs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compressor as CZ
+
+from .base import Codec, register
+from .container import Container, stamp_checksum
+
+
+@dataclasses.dataclass(frozen=True)
+class FzCodec(Codec):
+    cfg: CZ.CompressorConfig = CZ.CompressorConfig(
+        eb=1e-2, eb_mode="valrel", chunk_size=512, outlier_frac=1.0,
+        encoder="bitshuffle")
+    name = "fz"
+    version = 1
+    # Lorenzo prediction crosses slice boundaries (same reason as cusz).
+    shardable = False
+
+    @staticmethod
+    def make(cfg: Optional[CZ.CompressorConfig] = None, **kw) -> "FzCodec":
+        if cfg is None:
+            kw.setdefault("eb", 1e-2)
+            kw.setdefault("eb_mode", "valrel")
+            kw.setdefault("chunk_size", 512)
+            kw.setdefault("outlier_frac", 1.0)
+            kw.setdefault("encoder", "bitshuffle")
+            cfg = CZ.CompressorConfig(**kw)
+        elif kw:
+            cfg = dataclasses.replace(cfg, **kw)
+        if cfg.encoder != "bitshuffle":
+            cfg = dataclasses.replace(cfg, encoder="bitshuffle")
+        return FzCodec(cfg=cfg)
+
+    def _pipe(self, cfg: CZ.CompressorConfig) -> CZ.StagedPipeline:
+        return CZ.StagedPipeline.from_cfg(cfg)
+
+    # -- protocol -----------------------------------------------------------
+    def encode(self, x, *, cfg: Optional[CZ.CompressorConfig] = None
+               ) -> Container:
+        c = cfg if cfg is not None else self.cfg
+        x32 = jnp.asarray(x, jnp.float32) \
+            if jnp.asarray(x).dtype != jnp.float32 else jnp.asarray(x)
+        payload, eb = CZ.staged_compress(x32, c)
+        extra = {} if c.predictor == "lorenzo" else {"predictor": c.predictor}
+        header = self._header(
+            x, eb=float(eb), nbins=int(c.nbins), chunk_size=int(c.chunk_size),
+            block=tuple(c.block_for(x32.ndim)),
+            outlier_frac=float(c.outlier_frac), **extra)
+        return Container(header, payload)
+
+    def decode(self, c: Container, *, like=None) -> jax.Array:
+        c = self.unpack(c)
+        h = c.header
+        cfg = self._decode_cfg(h)
+        payload = {k: jnp.asarray(v) for k, v in c.payload.items()}
+        y = CZ.staged_decompress(payload, cfg, float(h.param("eb")), h.shape)
+        return self._finish(y, h, like)
+
+    # -- storage form: zero-plane elision happens here ----------------------
+    def pack(self, c: Container) -> Container:
+        if c.header.param("packed"):
+            return c
+        packed = self._pipe(self._decode_cfg(c.header)).pack(dict(c.payload))
+        return stamp_checksum(Container(c.header.with_params(packed=True),
+                                        packed))
+
+    def unpack(self, c: Container) -> Container:
+        if not c.header.param("packed"):
+            return c
+        h = c.header
+        cfg = self._decode_cfg(h)
+        payload = self._pipe(cfg).unpack(dict(c.payload), cfg, h.shape)
+        return Container(
+            h.with_params(packed=False).without_params("checksum"), payload)
+
+    def valid(self, c: Container) -> bool:
+        """False when the sparse outlier store overflowed its capacity."""
+        if c.header.param("packed"):
+            return True                       # pack() is post-validation
+        return self._pipe(self._decode_cfg(c.header)).valid(dict(c.payload))
+
+    # -- helpers ------------------------------------------------------------
+    def _decode_cfg(self, h) -> CZ.CompressorConfig:
+        return CZ.CompressorConfig(
+            eb=float(h.param("eb")), eb_mode="abs",
+            nbins=int(h.param("nbins")),
+            chunk_size=int(h.param("chunk_size")),
+            block=tuple(h.param("block")),
+            outlier_frac=float(h.param("outlier_frac")),
+            predictor=str(h.param("predictor", "lorenzo")),
+            encoder="bitshuffle",
+            kernel_impl=self.cfg.kernel_impl)
+
+
+register("fz", FzCodec.make)

@@ -1,27 +1,39 @@
-"""End-to-end cuSZ pipeline: dual-quant -> outliers -> Huffman -> blob.
+"""End-to-end compression pipeline as a staged composition:
+one `Predictor` + one `Encoder` (see `repro.core.stages`).
 
-Every hot stage routes through the `repro.kernels` ops layer, so the
-same pipeline runs the XLA reference impls, the interpret-mode Pallas
-kernels (CI parity), or the compiled Pallas kernels (TPU/GPU), selected
-by the dispatch policy: `CompressorConfig.kernel_impl`, overridden by
-the `REPRO_KERNEL_IMPL` env var or a `kernels.dispatch.kernel_policy`
-context.  The policy is resolved to a static `PipelinePolicy` outside
-jit, so each policy gets its own compiled executable.
+`CompressorConfig.predictor` / `.encoder` pick the stages by registry id
+("lorenzo"+"huffman" is the paper's cuSZ pipeline and the default; the
+"interp" predictor and "bitshuffle" encoder compose into the cusz-i and
+fz codecs with no pipeline changes).  Every hot stage routes through the
+`repro.kernels` ops layer, so the same pipeline runs the XLA reference
+impls, the interpret-mode Pallas kernels (CI parity), or the compiled
+Pallas kernels (TPU/GPU), selected by the dispatch policy:
+`CompressorConfig.kernel_impl`, overridden by the `REPRO_KERNEL_IMPL`
+env var or a `kernels.dispatch.kernel_policy` context.  The policy is
+resolved to a static `PipelinePolicy` outside jit, so each policy gets
+its own compiled executable.
 
-The forward dual-quant is ONE fused op (PREQUANT + Lorenzo delta +
-POSTQUANT in a single blocked kernel invocation): the compressor never
-materializes the int32 delta tree between separate stage dispatches —
-outliers are extracted from the fused op's outputs directly (code 0 is
-reserved for outliers, in-cap codes are >= 1 by construction).
+Two equivalent surfaces:
+
+* The generic dict surface (`StagedPipeline`, `staged_compress` /
+  `staged_decompress`): stage payloads are flat dicts of arrays — the
+  union of the predictor's and encoder's disjoint key sets — packed and
+  unpacked per stage.  Any predictor x encoder composition works here.
+* The `CompressedBlob` surface (`compress` / `decompress`, `pack_blob` /
+  `unpack_blob`): the historical named-tuple form whose fields are the
+  lorenzo/interp + huffman payload keys.  This is the cusz container
+  format; it is byte-identical to the pre-staged pipeline (golden-
+  fixture tested) and remains the API of the ratio/throughput tooling.
 
 `compress` / `decompress` are jittable for fixed (shape, config,
-policy); the blob is a pytree of device arrays so it can live on-device
-(e.g. checkpoint write path) or be pulled to host for storage.
+policy); payloads are pytrees of device arrays so they can live
+on-device (e.g. checkpoint write path) or be pulled to host for storage.
 
 Compressed-size accounting matches the paper's: Huffman bitstream (word
 aligned per chunk) + sparse outliers + codebook (bitlengths suffice to
 rebuild the canonical book) + the per-subchunk gap arrays that make the
-decode parallel (Rivera et al., arXiv 2201.09118) + O(1) header.
+decode parallel (Rivera et al., arXiv 2201.09118) + O(1) header (+ the
+interp predictor's anchor grid, when present).
 """
 from __future__ import annotations
 
@@ -34,14 +46,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import dispatch
-from repro.kernels.deflate import ops as deflate_ops
-from repro.kernels.encode import ops as encode_ops
-from repro.kernels.histogram import ops as hist_ops
-from repro.kernels.inflate import ops as inflate_ops
-from repro.kernels.lorenzo import ops as lorenzo_ops
 
 from . import dualquant as dq
 from . import huffman as hf
+from . import stages
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,7 +57,7 @@ class CompressorConfig:
     eb: float = 1e-4                 # absolute error bound (see eb_mode)
     eb_mode: str = "abs"             # "abs" | "valrel" (relative to range)
     nbins: int = 1024                # quantization bins (paper default)
-    chunk_size: int = 4096           # Huffman deflate chunk (symbols)
+    chunk_size: int = 4096           # encoder chunk (symbols)
     sub_size: int = 128              # gap-array subchunk (symbols); the
     #   parallel decode unit — must divide chunk_size
     block: Optional[Tuple[int, ...]] = None   # Lorenzo block; None = paper default
@@ -57,6 +65,8 @@ class CompressorConfig:
     use_tpu_blocks: bool = False     # lane-aligned blocks (beyond-paper)
     kernel_impl: Optional[str] = None  # dispatch default: "auto" | "jax" |
     #   "pallas" | "pallas-interpret"; None defers to the ambient policy
+    predictor: str = "lorenzo"       # stage registry id (core.stages)
+    encoder: str = "huffman"         # stage registry id (core.stages)
 
     def block_for(self, ndim: int) -> Tuple[int, ...]:
         if self.block is not None:
@@ -83,6 +93,8 @@ class CompressedBlob(NamedTuple):
     #   every sub_size-symbol boundary (phase-1 of the two-phase decode)
     gap_syms: Optional[jax.Array] = None   # [nc, n_sub] int32 valid symbols
     #   before each boundary
+    # interp-predictor anchor grid (None for the lorenzo predictor):
+    anchor: Optional[jax.Array] = None     # [n_anchor] int32
 
 
 @jax.jit
@@ -115,44 +127,123 @@ def resolve_eb(cfg: CompressorConfig, data) -> float:
     return eb
 
 
-def _shape_meta(shape, cfg):
-    ndim = len(shape)
-    block = cfg.block_for(ndim)
-    pshape = dq.padded_shape(shape, block)
-    n = int(np.prod(pshape))
-    cap = max(16, int(n * cfg.outlier_frac))
-    return ndim, block, pshape, n, cap
+# shared shape metadata now lives with the stage protocols
+_shape_meta = stages.shape_meta
+
+
+# ---------------------------------------------------------------------------
+# Generic staged pipeline (dict payloads, any predictor x encoder)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("cfg", "eb", "pp"))
+def _staged_compress_impl(data: jax.Array, cfg: CompressorConfig, eb: float,
+                          pp: dispatch.PipelinePolicy) -> dict:
+    pred = stages.get_predictor(cfg.predictor)
+    enc = stages.get_encoder(cfg.encoder)
+    codes, ppay = pred.predict(data, cfg, eb, pp)
+    epay = enc.encode(codes, cfg, pp)
+    return {**epay, **ppay}
+
+
+@partial(jax.jit, static_argnames=("cfg", "eb", "shape", "static_meta",
+                                   "pp"))
+def _staged_decompress_impl(payload: dict, aux, cfg: CompressorConfig,
+                            eb: float, shape: Tuple[int, ...],
+                            static_meta: Tuple, pp: dispatch.PipelinePolicy
+                            ) -> jax.Array:
+    pred = stages.get_predictor(cfg.predictor)
+    enc = stages.get_encoder(cfg.encoder)
+    codes = enc.decode(payload, aux, static_meta, cfg, pp)
+    return pred.reconstruct(codes, payload, cfg, eb, shape, pp)
+
+
+def staged_compress(data: jax.Array, cfg: CompressorConfig
+                    ) -> Tuple[dict, float]:
+    """Generic staged compress.  Returns (payload dict, resolved abs eb)."""
+    eb = resolve_eb(cfg, data)
+    pp = dispatch.pipeline_policy(cfg.kernel_impl)
+    return _staged_compress_impl(data, cfg, eb, pp), eb
+
+
+def staged_decompress(payload: dict, cfg: CompressorConfig, eb: float,
+                      shape: Tuple[int, ...]) -> jax.Array:
+    """Generic staged decompress of a (device-form) payload dict."""
+    enc = stages.get_encoder(cfg.encoder)
+    static_meta, aux = enc.decode_meta(payload, cfg)
+    pp = dispatch.pipeline_policy(cfg.kernel_impl)
+    return _staged_decompress_impl(payload, aux, cfg, eb, tuple(shape),
+                                   static_meta, pp)
+
+
+@dataclasses.dataclass(frozen=True)
+class StagedPipeline:
+    """A concrete predictor + encoder composition with the host-side
+    storage/validity surface codecs build on (`codecs.fz` is the
+    reference consumer; `codecs.cusz` keeps the CompressedBlob form of
+    the same composition for container-format stability)."""
+    predictor: stages.Predictor
+    encoder: stages.Encoder
+
+    @staticmethod
+    def from_cfg(cfg: CompressorConfig) -> "StagedPipeline":
+        return StagedPipeline(stages.get_predictor(cfg.predictor),
+                              stages.get_encoder(cfg.encoder))
+
+    def compress(self, data: jax.Array, cfg: CompressorConfig
+                 ) -> Tuple[dict, float]:
+        return staged_compress(data, cfg)
+
+    def decompress(self, payload: dict, cfg: CompressorConfig, eb: float,
+                   shape: Tuple[int, ...]) -> jax.Array:
+        return staged_decompress(payload, cfg, eb, shape)
+
+    def valid(self, payload: dict) -> bool:
+        return self.predictor.valid(payload)
+
+    # -- storage boundary (host) -------------------------------------------
+    def pack(self, payload: dict) -> dict:
+        # repro-lint: allow[host-sync] pack() is the storage boundary
+        host = jax.device_get(payload)
+        pkeys = set(self.predictor.payload_keys)
+        ppart = {k: v for k, v in host.items() if k in pkeys}
+        epart = {k: v for k, v in host.items() if k not in pkeys}
+        return {**self.encoder.pack_payload(epart),
+                **self.predictor.pack_payload(ppart)}
+
+    def unpack(self, packed: dict, cfg: CompressorConfig,
+               shape: Tuple[int, ...]) -> dict:
+        n_sym = self.predictor.n_codes(tuple(shape), cfg)
+        d = dict(self.encoder.unpack_payload(packed, cfg, n_sym))
+        d.update(self.predictor.unpack_payload(packed, cfg, tuple(shape)))
+        return {k: jnp.asarray(v) for k, v in d.items()}
+
+    def stored_nbytes(self, packed: dict) -> int:
+        return (self.encoder.stored_nbytes(packed)
+                + self.predictor.stored_nbytes(packed) + HEADER_BYTES)
+
+
+# ---------------------------------------------------------------------------
+# CompressedBlob surface (cusz container format; bit-identical to the
+# pre-staged pipeline)
+# ---------------------------------------------------------------------------
+
+def _blob_from_payload(payload: dict) -> CompressedBlob:
+    return CompressedBlob(**{f: payload.get(f)
+                             for f in CompressedBlob._fields})
 
 
 @partial(jax.jit, static_argnames=("cfg", "eb", "pp"))
 def _compress_impl(data: jax.Array, cfg: CompressorConfig, eb: float,
                    pp: dispatch.PipelinePolicy) -> CompressedBlob:
-    ndim, block, pshape, n, cap = _shape_meta(data.shape, cfg)
-    xb = dq.block_split(dq.pad_to_blocks(data, block), block)
-    # fused PREQUANT + ℓ-delta + POSTQUANT: one blocked kernel invocation
-    codes, delta = lorenzo_ops.dualquant_blocks(
-        xb, eb, cfg.nbins, **pp.dualquant.as_kwargs())
-    # code 0 <=> outlier (in-cap codes are >= 1), so the fused outputs
-    # feed outlier extraction directly — no recomputed in_cap tree
-    oidx, oval, n_out = dq.extract_outliers(
-        delta.reshape(-1), (codes != 0).reshape(-1), cap)
-    hist = hist_ops.histogram(codes, cfg.nbins, **pp.histogram.as_kwargs())
-    lengths = hf.codeword_lengths(hist)
-    cb = hf.canonical_codebook(lengths)
-    cw, bw = encode_ops.encode(codes, cb, **pp.encode.as_kwargs())
-    words, bits, gap_bits, gap_syms = deflate_ops.deflate(
-        cw, bw, cfg.chunk_size, cfg.sub_size, **pp.deflate.as_kwargs())
-    nc = words.shape[0]
-    n_sym = codes.size
-    n_valid = jnp.minimum(
-        jnp.full((nc,), cfg.chunk_size, jnp.int32),
-        jnp.maximum(n_sym - jnp.arange(nc, dtype=jnp.int32) * cfg.chunk_size, 0))
-    return CompressedBlob(words, bits, n_valid, lengths, oidx, oval,
-                          n_out, cb.max_len, gap_bits, gap_syms)
+    return _blob_from_payload(_staged_compress_impl(data, cfg, eb, pp))
 
 
 def compress(data: jax.Array, cfg: CompressorConfig) -> Tuple[CompressedBlob, float]:
     """Returns (blob, resolved_abs_eb)."""
+    if cfg.encoder != "huffman":
+        raise ValueError(
+            f"the CompressedBlob surface encodes the huffman payload "
+            f"layout; encoder {cfg.encoder!r} needs staged_compress()")
     eb = resolve_eb(cfg, data)
     pp = dispatch.pipeline_policy(cfg.kernel_impl)
     return _compress_impl(data, cfg, eb, pp), eb
@@ -164,32 +255,22 @@ def _decompress_impl(blob: CompressedBlob, table: hf.DecodeTable,
                      cfg: CompressorConfig, eb: float,
                      shape: Tuple[int, ...], max_len_static: int,
                      pp: dispatch.PipelinePolicy) -> jax.Array:
-    ndim, block, pshape, n, cap = _shape_meta(shape, cfg)
-    codes = inflate_ops.inflate(blob.words, blob.bits_used, blob.n_valid,
-                                table, max_len_static, gaps=blob.gap_bits,
-                                **pp.inflate.as_kwargs()).reshape(-1)[:n]
-    delta = dq.codes_to_delta(codes, cfg.nbins)
-    delta = dq.scatter_outliers(delta, blob.out_idx, blob.out_val)
-    nb = tuple(p // b for p, b in zip(pshape, block))
-    delta = delta.reshape(nb + tuple(block))
-    recon = lorenzo_ops.reverse_blocks(delta, eb, **pp.reverse.as_kwargs())
-    full = dq.block_merge(recon, block)
-    return full[tuple(slice(0, s) for s in shape)]
+    payload = {f: v for f, v in zip(CompressedBlob._fields, blob)
+               if v is not None}
+    pred = stages.get_predictor(cfg.predictor)
+    enc = stages.get_encoder(cfg.encoder)
+    codes = enc.decode(payload, table, (max_len_static,), cfg, pp)
+    return pred.reconstruct(codes, payload, cfg, eb, shape, pp)
 
 
 def decompress(blob: CompressedBlob, cfg: CompressorConfig, eb: float,
                shape: Tuple[int, ...]) -> jax.Array:
-    # repro-lint: allow[host-sync] max_len picks the LUT-vs-bitscan decode
-    # variant, a static jit arg; one scalar readback per decompress call
-    max_len = int(jax.device_get(blob.max_len))
-    # bucket the static max length (8/12/16/32) so decode compiles once
-    # per bucket, not once per field's exact max codeword length
-    ml_b = hf.bucket_max_len(max(1, max_len))
-    # decode tables built OUTSIDE the jitted decode, cached per codebook:
-    # the LUT scatter+cummax no longer re-runs on every restore
-    table = hf.decode_table(blob.lengths, ml_b)
+    enc = stages.get_encoder(cfg.encoder)
+    static_meta, table = enc.decode_meta(
+        {"max_len": blob.max_len, "lengths": blob.lengths}, cfg)
     pp = dispatch.pipeline_policy(cfg.kernel_impl)
-    return _decompress_impl(blob, table, cfg, eb, shape, ml_b, pp)
+    return _decompress_impl(blob, table, cfg, eb, tuple(shape),
+                            static_meta[0], pp)
 
 
 # ---------------------------------------------------------------------------
@@ -210,7 +291,8 @@ def compressed_bytes(blob: CompressedBlob, nbins: int) -> int:
     gaps = 0
     if blob.gap_bits is not None:              # 4 B bit + 2 B symbol offset
         gaps = blob.gap_bits.size * 4 + blob.gap_syms.size * 2
-    return stream + outliers + book + gaps + HEADER_BYTES
+    anchor = 0 if blob.anchor is None else blob.anchor.size * 4
+    return stream + outliers + book + gaps + anchor + HEADER_BYTES
 
 
 def compression_ratio(data: jax.Array, blob: CompressedBlob, nbins: int) -> float:
@@ -228,44 +310,21 @@ def roundtrip(data: jax.Array, cfg: CompressorConfig):
 # ---------------------------------------------------------------------------
 # Host-side packing for storage: keep only the used words per chunk (the
 # device blob keeps a dense [nc, chunk] buffer for fixed shapes; storing
-# that verbatim would waste the saved ratio).  Fully vectorized: packing
-# a many-chunk blob is O(1) NumPy calls, not O(nc) host iterations.
+# that verbatim would waste the saved ratio).  Delegated to the stage
+# pack/unpack implementations (stages.HuffmanEncoder carries the
+# vectorized word packing); output keys are unchanged from the
+# pre-staged pipeline, so stored cusz v2 payloads are bit-identical.
 # ---------------------------------------------------------------------------
-
-def _packed_coords(bits: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
-    """(chunk_id, in-chunk column) of every used word, packed order."""
-    nwords = (bits + 31) // 32                       # [nc]
-    chunk_ids = np.repeat(np.arange(bits.shape[0]), nwords)
-    starts = np.cumsum(nwords) - nwords              # packed offset per chunk
-    cols = np.arange(int(nwords.sum())) - np.repeat(starts, nwords)
-    return chunk_ids, cols
-
 
 def pack_blob(blob: CompressedBlob) -> dict:
     # repro-lint: allow[host-sync] pack_blob() is the storage boundary
     b = jax.device_get(blob)
-    words = np.asarray(b.words)
-    bits = np.asarray(b.bits_used, dtype=np.int64)
-    chunk_ids, cols = _packed_coords(bits)
-    packed = words[chunk_ids, cols]                  # one fancy-index gather
-    n_out = int(b.n_outliers)
-    d = {
-        "words_packed": packed.astype(np.uint32),
-        "bits_used": np.asarray(b.bits_used, np.int32),
-        "n_valid": np.asarray(b.n_valid, np.int32),
-        "lengths": np.asarray(b.lengths, np.uint8),
-        "out_idx": np.asarray(b.out_idx[:n_out], np.int32),
-        "out_val": np.asarray(b.out_val[:n_out], np.int32),
-        "max_len": np.asarray(b.max_len, np.int32),
-        "chunk_words": np.int32(words.shape[1]),
-        "out_capacity": np.int32(b.out_idx.shape[0]),
-    }
-    if b.gap_bits is not None:
-        d["gap_bits"] = np.asarray(b.gap_bits, np.int32)
-        # symbol offsets are < chunk_size; u16 when that fits (default
-        # chunks easily do), else full i32
-        sdt = np.uint16 if words.shape[1] <= (1 << 16) else np.int32
-        d["gap_syms"] = np.asarray(b.gap_syms).astype(sdt)
+    payload = {f: v for f, v in zip(CompressedBlob._fields, b)
+               if v is not None}
+    d = stages.get_encoder("huffman").pack_payload(payload)
+    d.update(stages._pack_outliers(payload))
+    if payload.get("anchor") is not None:
+        d["anchor"] = np.asarray(payload["anchor"], np.int32)
     return d
 
 
@@ -274,25 +333,11 @@ def packed_nbytes(d: dict) -> int:
 
 
 def unpack_blob(d: dict) -> CompressedBlob:
-    bits = np.asarray(d["bits_used"], np.int64)
-    nc = bits.shape[0]
-    cw = int(d["chunk_words"])
-    words = np.zeros((nc, cw), np.uint32)
-    chunk_ids, cols = _packed_coords(bits)
-    words[chunk_ids, cols] = np.asarray(d["words_packed"], np.uint32)
-    cap = int(d["out_capacity"])
-    oi = np.full((cap,), 2 ** 31 - 1, np.int32)
-    ov = np.zeros((cap,), np.int32)
-    n_out = len(d["out_idx"])
-    oi[:n_out] = d["out_idx"]
-    ov[:n_out] = d["out_val"]
-    gb = d.get("gap_bits")           # absent on format-v1 payloads
-    gs = d.get("gap_syms")
-    return CompressedBlob(
-        jnp.asarray(words), jnp.asarray(d["bits_used"]),
-        jnp.asarray(d["n_valid"]),
-        jnp.asarray(np.asarray(d["lengths"], np.int32)),
-        jnp.asarray(oi), jnp.asarray(ov),
-        jnp.asarray(np.int32(n_out)), jnp.asarray(d["max_len"]),
-        None if gb is None else jnp.asarray(np.asarray(gb, np.int32)),
-        None if gs is None else jnp.asarray(np.asarray(gs, np.int32)))
+    enc = stages.get_encoder("huffman").unpack_payload(d, None, None)
+    out = stages._unpack_outliers(d)
+    payload = {**enc, **out}
+    if d.get("anchor") is not None:
+        payload["anchor"] = np.asarray(d["anchor"], np.int32)
+    return CompressedBlob(**{
+        f: (jnp.asarray(payload[f]) if payload.get(f) is not None else None)
+        for f in CompressedBlob._fields})

@@ -144,6 +144,9 @@ def error_bound(qkv: QuantKV) -> jax.Array:
 #     f32 round trip.
 #   * "cusz": the full dual-quant + Huffman pipeline per slab (the
 #     host-offload / storage leg; each slab container is independent).
+#   * "fz": Lorenzo + fused bitshuffle with zero-plane elision — the
+#     throughput-class error-bounded wire (no codebook build on encode,
+#     no host prep on decode).
 #   * "lossless": raw bytes (the baseline the benchmarks compare against).
 # ---------------------------------------------------------------------------
 
@@ -151,12 +154,23 @@ def error_bound(qkv: QuantKV) -> jax.Array:
 #: value-range-relative bound and full outlier capacity (never overflows)
 CUSZ_WIRE_CFG = {"eb": 1e-2, "eb_mode": "valrel", "outlier_frac": 1.0}
 
+#: default fz wire configuration: same serving-tolerance bound; the
+#: 512-symbol chunk keeps plane-elision granularity near head-dim slabs
+FZ_WIRE_CFG = {"eb": 1e-2, "eb_mode": "valrel", "outlier_frac": 1.0,
+               "chunk_size": 512}
+
+#: wires that encode a whole dequantized slab through a registry codec
+#: (vs. the payload-space int8-block path)
+WHOLE_SLAB_WIRES = ("cusz", "fz", "lossless")
+
 
 def _wire_codec(wire: str, seq_axis: int, wire_cfg: Optional[dict] = None):
     from repro import codecs
 
     if wire == "cusz":
         return codecs.get("cusz", **(wire_cfg or CUSZ_WIRE_CFG))
+    if wire == "fz":
+        return codecs.get("fz", **(wire_cfg or FZ_WIRE_CFG))
     if wire == "lossless":
         return codecs.get("lossless")
     return codecs.get_block_codec(wire, axis=seq_axis, block=SEQ_BLOCK)
@@ -334,9 +348,10 @@ def kv_page_encode(slab: QuantKV, seq_axis: int, *,
                    codec_cfg: Optional[dict] = None) -> Tuple:
     """Page-granular wire encode (the pool's eviction leg): one page slab
     becomes a 1-tuple of packed Containers.  "int8-block" never leaves
-    payload space (bit-exact restore); "cusz"/"lossless" dequantize the
-    slab and re-encode it whole (the restore side re-quantizes, stacking
-    the codec's bound on top of the page's scale/2)."""
+    payload space (bit-exact restore); the whole-slab wires ("cusz",
+    "fz", "lossless") dequantize the slab and re-encode it whole (the
+    restore side re-quantizes, stacking the codec's bound on top of the
+    page's scale/2)."""
     return kv_wire_encode(slab, seq_axis, wire=codec, nslabs=1,
                           source_dtype=source_dtype, wire_cfg=codec_cfg)
 

@@ -244,12 +244,13 @@ def use_kv_reshard_compress(active):
     `active`: bool (True = "int8-block"; False/"none" = an explicit
     disarm, which the handoff resolves to the "lossless" raw-bytes wire)
     or a registry name — a blockwise wire codec ("int8-block", adopted
-    directly as the in-memory QuantKV on the decode side), "cusz" (the
-    host-offload/storage leg) or "lossless".  Validated at arm time like
-    the a2a/restore hooks: an id that is neither blockwise-configurable
-    nor one of the whole-slab wire codecs fails here, not mid-handoff."""
+    directly as the in-memory QuantKV on the decode side) or a
+    whole-slab wire ("cusz", "fz", "lossless").  Validated at arm time
+    like the a2a/restore hooks: an id that is neither blockwise-
+    configurable nor one of the whole-slab wire codecs fails here, not
+    mid-handoff."""
     name = _codec_name(active)
-    if name is not None and name not in ("cusz", "lossless"):
+    if name is not None and name not in ("cusz", "fz", "lossless"):
         from repro import codecs
         codecs.get_block_codec(name, axis=0, block=8)
     return _pushed(_kv_reshard_stack, name)
@@ -275,11 +276,11 @@ def use_kv_evict_codec(active):
     an explicit disarm, which the pool resolves to "int8-block" — cold
     pages always need *some* host form, and the lossless-payload one is
     the conservative default) or a registry name — "int8-block",
-    "cusz" (recompressed, higher ratio, restore re-quantizes under the
-    codec's bound) or "lossless" (raw dequantized values).  Validated at
-    arm time like the kv-reshard/a2a/restore hooks."""
+    "cusz"/"fz" (recompressed, higher ratio, restore re-quantizes under
+    the codec's bound) or "lossless" (raw dequantized values).
+    Validated at arm time like the kv-reshard/a2a/restore hooks."""
     name = _codec_name(active)
-    if name is not None and name not in ("cusz", "lossless"):
+    if name is not None and name not in ("cusz", "fz", "lossless"):
         from repro import codecs
         codecs.get_block_codec(name, axis=0, block=8)
     return _pushed(_kv_evict_stack, name)

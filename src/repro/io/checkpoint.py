@@ -121,7 +121,7 @@ class CheckpointPolicy:
     small, non-finite, zero-range) always store lossless.
     """
     codec: str = "lossless"                      # codec for eligible leaves
-    eb_valrel: float = 1e-5                      # cusz value-range-rel bound
+    eb_valrel: float = 1e-5                      # cusz-family valrel bound
     min_size: int = CUSZ_MIN_SIZE                # lossy-eligibility floor
     kernel_impl: Optional[str] = None            # cusz dispatch policy
     rules: Tuple[Tuple[str, str], ...] = ()      # (key substring, codec id)
@@ -137,10 +137,15 @@ class CheckpointPolicy:
         return name
 
     def make_codec(self, name: str) -> codecs.Codec:
-        if name == "cusz":
-            return codecs.get("cusz", eb=self.eb_valrel, eb_mode="valrel",
+        if name in ("cusz", "cusz-i", "fz"):
+            # the staged family shares the valrel bound discipline; the
+            # new-stage codecs get full outlier capacity — packed storage
+            # prices only the used prefix, and interp's residual tail
+            # overflows the default capacity at tight bounds
+            extra = {} if name == "cusz" else {"outlier_frac": 1.0}
+            return codecs.get(name, eb=self.eb_valrel, eb_mode="valrel",
                               use_tpu_blocks=True,
-                              kernel_impl=self.kernel_impl)
+                              kernel_impl=self.kernel_impl, **extra)
         return codecs.get(name)
 
     def _eligible(self, arr) -> bool:
@@ -202,16 +207,28 @@ class _LeafPlan:
 
 
 def _stored_size_estimate(codec: codecs.Codec, parts) -> int:
-    """Storage bytes without packing: shape metadata plus (for cusz) the
-    per-chunk word counts and outlier count — scalar-sized host syncs,
-    never a payload gather."""
-    if codec.name == "cusz":
+    """Storage bytes without packing: shape metadata plus (for the staged
+    family) the per-chunk word counts, kept-plane counts and outlier
+    count — scalar-sized host syncs, never a payload gather."""
+    if codec.name in ("cusz", "cusz-i"):
         from repro.core import compressor as CZ
         total = 0
         for p in parts:
             blob = CZ.CompressedBlob(**{f: p.payload.get(f)
                                         for f in CZ.CompressedBlob._fields})
             total += CZ.compressed_bytes(blob, int(p.header.param("nbins")))
+        return total
+    if codec.name == "fz":
+        # zero-plane elision happens at pack time: count the kept planes
+        # (one scalar sync) instead of the dense device form
+        total = 0
+        for p in parts:
+            # repro-lint: allow[host-sync] two scalar reductions per leaf
+            kept = int(jax.device_get(jnp.sum(p.payload["plane_nz"])))
+            n_out = int(jax.device_get(p.payload["n_outliers"]))  # repro-lint: allow[host-sync] scalar readback for the size estimate
+            nwords = int(p.payload["planes"].shape[2])
+            bitmap = (int(p.payload["plane_nz"].size) + 7) // 8
+            total += kept * nwords * 4 + bitmap + n_out * 8 + 8
         return total
     return sum(codec.stored_nbytes(p) if codec.name == "zfp"
                else sum(np.dtype(v.dtype).itemsize * v.size

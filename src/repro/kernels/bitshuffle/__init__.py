@@ -1,0 +1,1 @@
+"""Fused bit-plane shuffle kernels (FZ-GPU, arXiv 2304.12557)."""

@@ -1,0 +1,45 @@
+"""Jit'd public wrappers for the bit-plane shuffle kernels, registered
+with the dispatch layer (same contract as kernels/lorenzo/ops.py)."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+
+from .. import dispatch
+from . import kernel, ref
+from .ref import nplanes  # noqa: F401  (re-exported for stage/payload sizing)
+
+ENCODE = dispatch.register("bitshuffle.encode", impls=("jax", "pallas"))
+DECODE = dispatch.register("bitshuffle.decode", impls=("jax", "pallas"))
+
+
+@partial(jax.jit, static_argnames=("nbins", "impl", "interpret"))
+def _encode_jit(codes2, nbins: int, impl: str, interpret: bool):
+    if impl == "pallas":
+        return kernel.encode_planes_pallas(codes2, nbins,
+                                           interpret=interpret)
+    return ref.encode_planes_ref(codes2, nbins)
+
+
+def encode_planes(codes2, nbins: int, impl: Optional[str] = None,
+                  interpret: Optional[bool] = None):
+    """Fused zigzag + bitshuffle: [nc, chunk] codes -> [nc, P, W] planes."""
+    r = dispatch.resolve(ENCODE, impl, interpret)
+    return _encode_jit(codes2, nbins, r.impl, r.interpret)
+
+
+@partial(jax.jit, static_argnames=("nbins", "impl", "interpret"))
+def _decode_jit(planes, nbins: int, impl: str, interpret: bool):
+    if impl == "pallas":
+        return kernel.decode_planes_pallas(planes, nbins,
+                                           interpret=interpret)
+    return ref.decode_planes_ref(planes, nbins)
+
+
+def decode_planes(planes, nbins: int, impl: Optional[str] = None,
+                  interpret: Optional[bool] = None):
+    """Inverse bitshuffle: [nc, P, W] planes -> [nc, 32·W] codes."""
+    r = dispatch.resolve(DECODE, impl, interpret)
+    return _decode_jit(planes, nbins, r.impl, r.interpret)

@@ -1,0 +1,50 @@
+"""XLA reference implementation of the fused bit-plane shuffle.
+
+Encode maps each quant code to its zigzag distance from the bin radius
+(so near-prediction codes become small unsigned values whose high bit
+planes are all zero — the OUTLIER sentinel 0 lands on the max value
+nbins−1 and simply keeps its chunk's planes nonzero), then transposes
+each chunk into P = bitlength(nbins−1) bit planes of chunk/32 uint32
+words:
+
+  planes[c, p, w] bit l  =  bit p of zigzag(codes[c, 32·w + l])
+
+A plane whose words are all zero carries no information; the host-side
+pack elides it (zero-plane elision), which is where the compression
+comes from.  Decode is the exact bitwise inverse.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def nplanes(nbins: int) -> int:
+    """Bit planes needed for the zigzag code domain [0, nbins)."""
+    return max(1, int(nbins - 1).bit_length())
+
+
+def encode_planes_ref(codes2: jax.Array, nbins: int) -> jax.Array:
+    """[nc, chunk] int32 codes in [0, nbins) -> [nc, P, chunk/32] uint32."""
+    nc, chunk = codes2.shape
+    p_count = nplanes(nbins)
+    d = codes2 - nbins // 2
+    v = ((d << 1) ^ (d >> 31)).astype(jnp.uint32)       # zigzag >= 0
+    vw = v.reshape(nc, chunk // 32, 32)
+    planes = (vw[:, None, :, :] >>
+              jnp.arange(p_count, dtype=jnp.uint32)[None, :, None, None]) & 1
+    lane_w = jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(planes * lane_w, axis=-1, dtype=jnp.uint32)
+
+
+def decode_planes_ref(planes: jax.Array, nbins: int) -> jax.Array:
+    """[nc, P, W] uint32 planes -> [nc, 32·W] int32 codes in [0, nbins)."""
+    nc, p_count, w = planes.shape
+    lanes = jnp.arange(32, dtype=jnp.uint32)
+    bits = (planes[..., None] >> lanes) & 1             # [nc, P, W, 32]
+    plane_w = jnp.uint32(1) << jnp.arange(p_count, dtype=jnp.uint32)
+    v = jnp.sum(bits * plane_w[None, :, None, None], axis=1,
+                dtype=jnp.uint32)                       # [nc, W, 32]
+    vi = v.reshape(nc, w * 32).astype(jnp.int32)
+    d = (vi >> 1) ^ -(vi & 1)                           # un-zigzag
+    return d + nbins // 2

@@ -233,20 +233,56 @@ def resolve(kernel: str, impl: Optional[str] = None,
 # ---------------------------------------------------------------------------
 # Whole-pipeline policy: the compressor resolves every stage once, outside
 # jit, and passes the frozen result as a static argument.
+#
+# PIPELINE_STAGES lists every kernel a registered predictor/encoder stage
+# (core.stages) may dispatch.  `pipeline_policy` resolves whichever of
+# them are registered at call time (stage kernels register when their
+# stage module imports), so a policy built before an optional stage
+# loads never KeyErrors — the stage itself cannot run either way.
 # ---------------------------------------------------------------------------
 
 PIPELINE_STAGES = ("lorenzo.dualquant", "lorenzo.reverse", "histogram",
-                   "encode", "deflate", "inflate")
+                   "encode", "deflate", "inflate",
+                   "interp.predict", "interp.reconstruct",
+                   "bitshuffle.encode", "bitshuffle.decode")
+
+# legacy attribute names kept for the original six-stage cusz pipeline
+# (tests/benchmarks address e.g. `pp.dualquant` directly)
+_LEGACY_FIELDS = {
+    "dualquant": "lorenzo.dualquant",
+    "reverse": "lorenzo.reverse",
+    "histogram": "histogram",
+    "encode": "encode",
+    "deflate": "deflate",
+    "inflate": "inflate",
+}
 
 
 @dataclasses.dataclass(frozen=True)
 class PipelinePolicy:
-    dualquant: Resolved
-    reverse: Resolved
-    histogram: Resolved
-    encode: Resolved
-    deflate: Resolved
-    inflate: Resolved
+    """Frozen per-kernel dispatch decisions, safe as a jit static arg.
+
+    Generic over the stage set: `entries` maps kernel name -> Resolved
+    for every registered PIPELINE_STAGES kernel; `for_kernel` is the
+    lookup stage implementations use.  The six original cusz stages
+    remain addressable as attributes (`pp.dualquant`, `pp.inflate`, ...).
+    """
+    entries: Tuple[Tuple[str, "Resolved"], ...] = ()
+
+    def for_kernel(self, kernel: str) -> Resolved:
+        for name, r in self.entries:
+            if name == kernel:
+                return r
+        raise KeyError(
+            f"pipeline policy has no resolution for kernel {kernel!r} "
+            f"(resolved: {[n for n, _ in self.entries]}); was the stage's "
+            "ops module imported before pipeline_policy()?")
+
+    def __getattr__(self, name: str) -> Resolved:
+        kernel = _LEGACY_FIELDS.get(name)
+        if kernel is None:
+            raise AttributeError(name)
+        return self.for_kernel(kernel)
 
 
 def pipeline_policy(default_impl: Optional[str] = None) -> PipelinePolicy:
@@ -263,11 +299,5 @@ def pipeline_policy(default_impl: Optional[str] = None) -> PipelinePolicy:
         # forced "pallas" policy must not crash the jax-only stages
         return resolve(kernel, impl, explicit=False)
 
-    return PipelinePolicy(
-        dualquant=r("lorenzo.dualquant"),
-        reverse=r("lorenzo.reverse"),
-        histogram=r("histogram"),
-        encode=r("encode"),
-        deflate=r("deflate"),
-        inflate=r("inflate"),
-    )
+    return PipelinePolicy(entries=tuple(
+        (k, r(k)) for k in PIPELINE_STAGES if k in _REGISTRY))

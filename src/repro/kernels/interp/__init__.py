@@ -1,0 +1,1 @@
+"""Multi-level interpolation predictor kernels (cuSZ-i, arXiv 2312.05492)."""

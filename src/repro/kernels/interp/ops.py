@@ -1,0 +1,46 @@
+"""Jit'd public wrappers for the interpolation-level kernels, registered
+with the dispatch layer (same contract as kernels/lorenzo/ops.py:
+resolution happens outside the jit boundary, an explicit `impl` wins
+over the ambient policy).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+
+from .. import dispatch
+from . import kernel, ref
+
+PREDICT = dispatch.register("interp.predict", impls=("jax", "pallas"))
+RECONSTRUCT = dispatch.register("interp.reconstruct", impls=("jax", "pallas"))
+
+
+@partial(jax.jit, static_argnames=("impl", "interpret"))
+def _residual_jit(pe, odd, impl: str, interpret: bool):
+    if impl == "pallas":
+        return kernel.residual_rows_pallas(pe, odd, interpret=interpret)
+    return ref.residual_rows_ref(pe, odd)
+
+
+def residual_rows(pe, odd, impl: Optional[str] = None,
+                  interpret: Optional[bool] = None):
+    """Encode direction of one interpolation level: residual = odd − p(even).
+    `pe` is the padded even rows [R, me+3], `odd` the odd rows [R, mo]."""
+    r = dispatch.resolve(PREDICT, impl, interpret)
+    return _residual_jit(pe, odd, r.impl, r.interpret)
+
+
+@partial(jax.jit, static_argnames=("impl", "interpret"))
+def _odd_jit(pe, resid, impl: str, interpret: bool):
+    if impl == "pallas":
+        return kernel.odd_rows_pallas(pe, resid, interpret=interpret)
+    return ref.odd_rows_ref(pe, resid)
+
+
+def odd_rows(pe, resid, impl: Optional[str] = None,
+             interpret: Optional[bool] = None):
+    """Decode direction: odd = residual + p(even)."""
+    r = dispatch.resolve(RECONSTRUCT, impl, interpret)
+    return _odd_jit(pe, resid, r.impl, r.interpret)

@@ -1,0 +1,38 @@
+"""XLA reference implementation of the per-level cubic interpolation step.
+
+One interpolation level along one axis, collapsed to 2D rows (the ops
+layer moves the working axis last and flattens the rest):
+
+  pe   [R, me+3] int32  even-sample rows, edge-replicate padded with one
+                        sample left and two right (so every odd position
+                        sees four even neighbors with static offsets)
+  odd  [R, mo]   int32  the odd samples (encode) / their residuals (decode)
+
+The predictor for odd position i is the integer cubic (Catmull-Rom style)
+stencil over even neighbors  p = (9·(b+c) − a − d + 8) >> 4  with
+a..d = pe[i .. i+3].  All arithmetic is exact int32 (prequant magnitudes
+are < 2^23, so 9·(b+c) stays far from overflow) and the arithmetic right
+shift is floor division on both sides, so encode/decode are exact
+inverses — the scheme is lossless on the prequantized integers.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _predict(pe: jax.Array, mo: int) -> jax.Array:
+    a = pe[:, 0:mo]
+    b = pe[:, 1:1 + mo]
+    c = pe[:, 2:2 + mo]
+    d = pe[:, 3:3 + mo]
+    return (9 * (b + c) - a - d + 8) >> 4
+
+
+def residual_rows_ref(pe: jax.Array, odd: jax.Array) -> jax.Array:
+    """Encode direction: residual = odd − prediction(even)."""
+    return odd - _predict(pe, odd.shape[1])
+
+
+def odd_rows_ref(pe: jax.Array, resid: jax.Array) -> jax.Array:
+    """Decode direction: odd = residual + prediction(even)."""
+    return resid + _predict(pe, resid.shape[1])

@@ -17,8 +17,8 @@ Three jobs live here:
   last-touch ordering for cold-first reclaim.
 * **eviction / restore** — cold pages cross to host through a wire
   codec: ``"int8-block"`` packs the payload (bit-exact restore),
-  ``"cusz"`` re-compresses the dequantized slab (higher ratio; restore
-  decodes + re-quantizes under the codec's bound via a jitted,
+  ``"cusz"``/``"fz"`` re-compress the dequantized slab (higher ratio;
+  restore decodes + re-quantizes under the codec's bound via a jitted,
   signature-cached path), ``"lossless"`` ships raw dequantized values.
   Codec resolution: explicit arg > the armed
   ``dist.context.use_kv_evict_codec`` hook > "cusz".
@@ -44,7 +44,7 @@ from repro.dist import context as dist_ctx
 PAGE_SEQ_AXIS = 2
 
 #: eviction codecs the pool accepts beyond blockwise-configurable ones
-_WHOLE_SLAB_CODECS = ("cusz", "lossless")
+_WHOLE_SLAB_CODECS = KVC.WHOLE_SLAB_WIRES
 
 
 class PoolExhausted(RuntimeError):

@@ -27,3 +27,32 @@ class NoShardSurface:
 
 register("nodecode", lambda **kw: NoDecode(**kw))
 register("noshard", lambda **kw: NoShardSurface(**kw))
+
+
+def register_predictor(name, factory):
+    pass
+
+
+def register_encoder(name, factory):
+    pass
+
+
+class NoReconstruct:
+    kernels = ("some.kernel",)
+
+    def predict(self, data, cfg, eb, pp):
+        pass
+    # FLAG: no reconstruct
+
+
+class NoKernelsEncoder:
+    # FLAG: no kernels tuple
+    def encode(self, codes, cfg, pp):
+        pass
+
+    def decode(self, payload, aux, static_meta, cfg, pp):
+        pass
+
+
+register_predictor("noreconstruct", NoReconstruct)
+register_encoder("nokernels", NoKernelsEncoder)

@@ -40,3 +40,45 @@ class OptedOut:
 
 register("full", lambda **kw: FullSurface(**kw))
 register("opted", OptedOut.make)
+
+
+def register_predictor(name, factory):
+    pass
+
+
+def register_encoder(name, factory):
+    pass
+
+
+class Predictor:
+    """Abstract stage base: its raising stubs must not satisfy R3."""
+
+    def predict(self, data, cfg, eb, pp):
+        raise NotImplementedError
+
+    def reconstruct(self, codes, payload, cfg, eb, shape, pp):
+        raise NotImplementedError
+
+
+class GoodPredictor(Predictor):
+    kernels = ("some.kernel", "other.kernel")
+
+    def predict(self, data, cfg, eb, pp):
+        pass
+
+    def reconstruct(self, codes, payload, cfg, eb, shape, pp):
+        pass
+
+
+class GoodEncoder:
+    kernels = ()
+
+    def encode(self, codes, cfg, pp):
+        pass
+
+    def decode(self, payload, aux, static_meta, cfg, pp):
+        pass
+
+
+register_predictor("good", GoodPredictor)
+register_encoder("goodenc", GoodEncoder)

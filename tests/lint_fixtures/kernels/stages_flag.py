@@ -1,0 +1,30 @@
+"""R4 stage-kernels fixture: one stage resolving to a registered op,
+one declaring a kernel nothing registers."""
+
+
+def register_predictor(name, factory):
+    pass
+
+
+class ResolvesPredictor:
+    kernels = ("passop",)                # registered by passop/ops.py
+
+    def predict(self, data, cfg, eb, pp):
+        pass
+
+    def reconstruct(self, codes, payload, cfg, eb, shape, pp):
+        pass
+
+
+class DanglingPredictor:
+    kernels = ("ghostop.forward",)       # FLAG: no ops.py registers this
+
+    def predict(self, data, cfg, eb, pp):
+        pass
+
+    def reconstruct(self, codes, payload, cfg, eb, shape, pp):
+        pass
+
+
+register_predictor("resolves", ResolvesPredictor)
+register_predictor("dangling", DanglingPredictor)

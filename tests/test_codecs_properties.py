@@ -37,6 +37,11 @@ def _make(name: str, eb: float) -> codecs.Codec:
     if name == "cusz":
         return codecs.get("cusz", eb=eb, eb_mode="valrel", chunk_size=256,
                           outlier_frac=1.0)
+    if name in ("cusz-i", "fz"):
+        # the staged-pipeline codecs: same bound discipline as cusz
+        # (full outlier capacity so the bound always holds)
+        return codecs.get(name, eb=eb, eb_mode="valrel", chunk_size=256,
+                          outlier_frac=1.0)
     if name == "int8-block":
         return codecs.get("int8-block", axis=-1, block=BLOCK)
     if name == "zfp":
@@ -68,7 +73,7 @@ def _tolerance(name: str, cont, x32: np.ndarray, dtype: str):
         scale = np.asarray(cont.payload["scale"])
         per_elem = np.repeat(scale, BLOCK, axis=-1) / 2
         return per_elem * 1.001 + bf16_round + 1e-12
-    if name == "cusz":
+    if name in ("cusz", "cusz-i", "fz"):
         return float(cont.header.param("eb")) * 1.001 + bf16_round + 1e-12
     return None                    # zfp / unknown: no a-priori bound
 

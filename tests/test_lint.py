@@ -69,6 +69,14 @@ class TestR3CodecRegistry:
         assert sum("sharded-encode surface" in m for m in msgs) == 2
         assert any("header param `table`" in m for m in msgs)
 
+    def test_flags_incomplete_stages(self):
+        rep = lint_paths([_fx("codecs", "r3_flag.py")], rules=["R3"])
+        msgs = [f.message for f in rep.unwaived]
+        assert any("predictor stage `noreconstruct`" in m
+                   and "does not define `reconstruct`" in m for m in msgs)
+        assert any("encoder stage `nokernels`" in m
+                   and "`kernels` tuple" in m for m in msgs)
+
     def test_full_surface_or_optout_passes(self):
         rep = lint_paths([_fx("codecs", "r3_pass.py")], rules=["R3"])
         assert rep.unwaived == []
@@ -82,6 +90,13 @@ class TestR4KernelDispatch:
         assert any("rawonly_flag" in m and "jax_only_reason" in m
                    for m in msgs)
         assert not any("passop" in m or "rawonly_pass" in m for m in msgs)
+
+    def test_flags_dangling_stage_kernel_decl(self):
+        rep = lint_paths([_fx("kernels")], rules=["R4"])
+        msgs = [f.message for f in rep.unwaived]
+        assert any("stage `dangling`" in m and "ghostop.forward" in m
+                   for m in msgs)
+        assert not any("stage `resolves`" in m for m in msgs)
 
 
 class TestR5TracerBranch:

@@ -1,4 +1,4 @@
-"""R3: codec-registry completeness.
+"""R3: codec- and stage-registry completeness.
 
 Every ``register("<id>", factory)`` call in ``repro/codecs/`` must point
 at a class that statically implements the `Codec` protocol:
@@ -12,6 +12,15 @@ at a class that statically implements the `Codec` protocol:
 * header parameters passed to ``make_header`` / ``with_params`` /
   ``Header`` must be JSON-representable: no dict/set displays, lambdas
   or bytes literals (tuples are fine — they serialize as lists).
+
+The staged pipeline's registries (``core.stages``) are held to the same
+standard: every ``register_predictor("<id>", Factory)`` must resolve to
+a class defining ``predict`` and ``reconstruct``, every
+``register_encoder("<id>", Factory)`` to one defining ``encode`` and
+``decode``, and both must declare a ``kernels`` tuple (the dispatch
+keys R4 cross-checks against the kernels/<op>/ops.py registrations).
+The abstract `Predictor`/`Encoder` bases do not satisfy the method
+requirement — their versions raise.
 """
 from __future__ import annotations
 
@@ -25,6 +34,12 @@ CATEGORY = "codec-registry"
 
 _ABSTRACT_BASE = "Codec"
 _HEADER_CALLS = {"make_header", "with_params", "Header"}
+
+#: stage-registry calls -> the methods the factory class must define
+_STAGE_CALLS = {"register_predictor": ("predict", "reconstruct"),
+                "register_encoder": ("encode", "decode")}
+#: abstract stage bases whose raising method stubs must not count
+_STAGE_ABSTRACT = {"Predictor", "Encoder", _ABSTRACT_BASE}
 
 
 def _class_defs(mod: ModuleInfo) -> Dict[str, ast.ClassDef]:
@@ -61,9 +76,10 @@ def _factory_class(index: Index, mod: ModuleInfo,
 
 
 def _own_names(index: Index, mod: ModuleInfo, cd: ast.ClassDef,
-               depth: int = 0) -> Dict[str, bool]:
+               depth: int = 0, abstract=frozenset({_ABSTRACT_BASE})
+               ) -> Dict[str, bool]:
     """{name: True} of methods/attrs defined on `cd` or a concrete
-    ancestor (the abstract `Codec` base does not count)."""
+    ancestor (abstract bases, whose stubs raise, do not count)."""
     names: Dict[str, bool] = {}
     for n in cd.body:
         if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
@@ -76,10 +92,11 @@ def _own_names(index: Index, mod: ModuleInfo, cd: ast.ClassDef,
             names[n.target.id] = True
     if depth < 4:
         for b in cd.bases:
-            if isinstance(b, ast.Name) and b.id != _ABSTRACT_BASE:
+            if isinstance(b, ast.Name) and b.id not in abstract:
                 parent = _resolve_class(index, mod, b.id)
                 if parent is not None:
-                    for k in _own_names(index, mod, parent, depth + 1):
+                    for k in _own_names(index, mod, parent, depth + 1,
+                                        abstract):
                         names.setdefault(k, True)
     return names
 
@@ -111,9 +128,50 @@ def _json_scalar(node: ast.AST) -> bool:
     return True        # names/calls/arith: not statically decidable
 
 
+def _check_stage_registrations(index: Index, mod: ModuleInfo,
+                               findings: List[Finding]) -> None:
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call) or len(node.args) < 2:
+            continue
+        fname = (node.func.attr if isinstance(node.func, ast.Attribute)
+                 else node.func.id if isinstance(node.func, ast.Name)
+                 else None)
+        if fname not in _STAGE_CALLS:
+            continue
+        if not (isinstance(node.args[0], ast.Constant)
+                and isinstance(node.args[0].value, str)):
+            continue
+        stage_id = node.args[0].value
+        kind = "predictor" if fname == "register_predictor" else "encoder"
+        cls_name = _factory_class(index, mod, node.args[1])
+        cd = (_resolve_class(index, mod, cls_name)
+              if cls_name is not None else None)
+        if cd is None:
+            findings.append(Finding(
+                RULE_ID, mod.path, node.lineno, node.col_offset,
+                f"{kind} stage `{stage_id}`: cannot statically resolve "
+                "the factory to a class definition"))
+            continue
+        names = _own_names(index, mod, cd,
+                           abstract=frozenset(_STAGE_ABSTRACT))
+        for required in _STAGE_CALLS[fname]:
+            if required not in names:
+                findings.append(Finding(
+                    RULE_ID, mod.path, cd.lineno, cd.col_offset,
+                    f"{kind} stage `{stage_id}` ({cd.name}) does not "
+                    f"define `{required}`"))
+        if "kernels" not in names:
+            findings.append(Finding(
+                RULE_ID, mod.path, cd.lineno, cd.col_offset,
+                f"{kind} stage `{stage_id}` ({cd.name}) does not declare "
+                "a `kernels` tuple (the dispatch keys the stage resolves "
+                "through the pipeline policy)"))
+
+
 def run(index: Index) -> List[Finding]:
     findings: List[Finding] = []
     for mod in index.modules:
+        _check_stage_registrations(index, mod, findings)
         if "/codecs/" not in mod.path.replace("\\", "/"):
             continue
         for node in ast.walk(mod.tree):

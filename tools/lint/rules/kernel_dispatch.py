@@ -11,6 +11,10 @@
 * Every stage named in ``dispatch.PIPELINE_STAGES`` must be registered
   by some ``ops.py`` — a stage the pipeline policy resolves but nothing
   registers fails at runtime.
+* Every kernel key a predictor/encoder stage class declares in its
+  ``kernels`` tuple (``core.stages`` registrations) must likewise be
+  registered by some ``ops.py`` — a stage whose pipeline-policy lookup
+  cannot resolve fails on first use.
 """
 from __future__ import annotations
 
@@ -19,6 +23,9 @@ import os
 from typing import Dict, List, Optional, Tuple
 
 from ..engine import Finding, Index, ModuleInfo
+from .codec_registry import _factory_class, _resolve_class
+
+_STAGE_REGISTER_CALLS = ("register_predictor", "register_encoder")
 
 RULE_ID = "R4-kernel-dispatch"
 CATEGORY = "kernel-dispatch"
@@ -63,6 +70,50 @@ def _jax_only_reason(call: ast.Call) -> Optional[str]:
                 return kw.value.value
             return ""
     return None
+
+
+def _class_kernels(cd: ast.ClassDef) -> Optional[Tuple[str, ...]]:
+    """The literal `kernels = ("...", ...)` tuple of a stage class."""
+    for n in cd.body:
+        val = None
+        if isinstance(n, ast.Assign) and any(
+                isinstance(t, ast.Name) and t.id == "kernels"
+                for t in n.targets):
+            val = n.value
+        elif (isinstance(n, ast.AnnAssign)
+              and isinstance(n.target, ast.Name)
+              and n.target.id == "kernels"):
+            val = n.value
+        if isinstance(val, (ast.Tuple, ast.List)) and all(
+                isinstance(e, ast.Constant) and isinstance(e.value, str)
+                for e in val.elts):
+            return tuple(e.value for e in val.elts)
+    return None
+
+
+def _stage_kernel_decls(index: Index) -> List[Tuple[ModuleInfo, ast.Call,
+                                                    str, Tuple[str, ...]]]:
+    """(module, call, stage id, kernels tuple) per stage registration."""
+    out = []
+    for mod in index.modules:
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call) or len(node.args) < 2:
+                continue
+            fname = (node.func.attr
+                     if isinstance(node.func, ast.Attribute)
+                     else node.func.id if isinstance(node.func, ast.Name)
+                     else None)
+            if fname not in _STAGE_REGISTER_CALLS:
+                continue
+            if not (isinstance(node.args[0], ast.Constant)
+                    and isinstance(node.args[0].value, str)):
+                continue
+            cls_name = _factory_class(index, mod, node.args[1])
+            cd = (_resolve_class(index, mod, cls_name)
+                  if cls_name is not None else None)
+            kernels = _class_kernels(cd) if cd is not None else None
+            out.append((mod, node, node.args[0].value, kernels or ()))
+    return out
 
 
 def run(index: Index) -> List[Finding]:
@@ -122,4 +173,12 @@ def run(index: Index) -> List[Finding]:
                                 e.col_offset,
                                 f"pipeline stage `{e.value}` is not "
                                 "registered by any kernels/<op>/ops.py"))
+    for mod, call, stage_id, kernels in _stage_kernel_decls(index):
+        for kname in kernels:
+            if kname not in registered_names:
+                findings.append(Finding(
+                    RULE_ID, mod.path, call.lineno, call.col_offset,
+                    f"stage `{stage_id}` declares kernel `{kname}` that "
+                    "no kernels/<op>/ops.py registers — the pipeline-"
+                    "policy lookup fails on first use"))
     return findings
